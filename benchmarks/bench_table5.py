@@ -1,0 +1,83 @@
+"""Table 5 + Figs. 8/9 reproduction (App. C.3 / D.1): dead-neuron dynamics
+and the two mitigation strategies — L1 warm-up scheduling and targeted
+gate-column reinitialization (Eq. 6)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BATCH, SEQ, emit, tiny_cfg
+from repro.config import TrainConfig
+from repro.core.sparsity import targeted_reinit
+from repro.data.pipeline import SyntheticLM
+from repro.models import lm
+from repro.optim import adamw
+from repro import training
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                   "bench_table5.json")
+
+
+def train_with_tracking(cfg, steps=250, lr=3e-3, reinit=False, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = lm.init(key, cfg)
+    opt = adamw.init(params)
+    data = SyntheticLM(cfg.vocab_size, BATCH, SEQ, seed=seed)
+    step = jax.jit(training.make_train_step(
+        cfg, TrainConfig(total_steps=steps, warmup_steps=10,
+                         learning_rate=lr)))
+    aux_fn = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg)[1][1])
+    reinit_v = jax.jit(jax.vmap(lambda k, w, d: targeted_reinit(k, w, d)))
+    rkey = jax.random.PRNGKey(99)
+    curve = []
+    m = {}
+    for s in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, m = step(params, opt, b)
+        aux = aux_fn(params, b)
+        dead = ~aux["neuron_active"]                     # (L, d_ff)
+        if reinit:
+            rkey, sub = jax.random.split(rkey)
+            keys = jax.random.split(sub, cfg.num_layers)
+            params["blocks"]["ffn"]["wg"] = reinit_v(
+                keys, params["blocks"]["ffn"]["wg"], dead)
+        if s % 25 == 0 or s == steps - 1:
+            curve.append({"step": s, "ce": float(m["ce"]),
+                          "nnz": float(m["nnz_mean"]),
+                          "dead_frac": float(dead.mean())})
+    return {"curve": curve, "ce": float(m["ce"]), "nnz": float(m["nnz_mean"]),
+            "dead_frac": curve[-1]["dead_frac"]}
+
+
+def run(steps=250):
+    results = {}
+    # l1=10 drives per-step dead neurons at CPU scale (l1=3 leaves none —
+    # the mitigation comparison needs a regime where the pathology exists)
+    base = tiny_cfg(l1=10.0, layers=2)
+    # standard recipe
+    results["standard"] = train_with_tracking(base, steps)
+    # sparsity warm-up (paper: constant 0 then linear ramp, 10x coefficient)
+    warm = dataclasses.replace(base, sparsity=dataclasses.replace(
+        base.sparsity, l1_coeff=100.0, l1_constant_steps=steps // 4,
+        l1_warmup_steps=steps // 4))
+    results["warmup"] = train_with_tracking(warm, steps)
+    # targeted dead-neuron reinitialization (Eq. 6)
+    results["reinit"] = train_with_tracking(base, steps, reinit=True)
+    # unregularized reference
+    results["dense"] = train_with_tracking(tiny_cfg(l1=0.0, layers=2), steps)
+    for k, v in results.items():
+        emit(f"table5_{k}", 0.0,
+             f"ce={v['ce']:.4f};nnz={v['nnz']:.1f};"
+             f"dead_frac={v['dead_frac']:.3f}")
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,89 @@
+"""Shared benchmark helpers: tiny-model training, timing, CSV emission.
+
+CPU-scale notes (documented in EXPERIMENTS.md): wall-times below are
+single-CPU XLA numbers — they demonstrate the *mechanisms* (packed formats,
+skip fractions, memory reductions) and calibrate the analytic TPU model;
+they are not TPU throughput claims. L1 coefficients are scaled up relative
+to the paper's (2e-5 at 1M-token batches over >=10k steps) so the same
+sparsification dynamics are observable within a CPU budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models import lm
+from repro.optim import adamw
+from repro import training
+
+BATCH, SEQ = 4, 64
+
+
+def tiny_cfg(l1=0.0, layers=2, d_model=96, d_ff=256, gated=True,
+             activation="relu", ffn_impl="dense", arch="paper-0.5b"):
+    base = get_config(arch).reduced(d_model=d_model, d_ff=d_ff,
+                                    num_layers=layers)
+    return dataclasses.replace(
+        base, gated=gated,
+        sparsity=dataclasses.replace(base.sparsity, l1_coeff=l1,
+                                     activation=activation,
+                                     ffn_impl=ffn_impl))
+
+
+def train_tiny(cfg, steps=200, lr=3e-3, seed=0, record_every=10,
+               warmup_cfg=None, reinit=False) -> Dict:
+    key = jax.random.PRNGKey(seed)
+    params = lm.init(key, cfg)
+    opt = adamw.init(params)
+    data = SyntheticLM(cfg.vocab_size, BATCH, SEQ, seed=seed)
+    tcfg = TrainConfig(total_steps=steps, warmup_steps=10, learning_rate=lr)
+    step = jax.jit(training.make_train_step(cfg, tcfg))
+    loss_eval = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg))
+    curve: List[Dict] = []
+    ever_active = jnp.zeros((cfg.d_ff,), bool)
+    rkey = jax.random.PRNGKey(777)
+    for s in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, m = step(params, opt, b)
+        if reinit and "ffn" in getattr(params.get("blocks", {}), "keys",
+                                       lambda: [])():
+            pass
+        if s % record_every == 0 or s == steps - 1:
+            _, (_, aux) = loss_eval(params, b)
+            dead = 1.0 - float(jnp.any(aux["neuron_active"], 0).mean()) if \
+                aux["neuron_active"].ndim > 1 else \
+                1.0 - float(aux["neuron_active"].mean())
+            curve.append({"step": s, "ce": float(m["ce"]),
+                          "nnz": float(m["nnz_mean"]),
+                          "nnz_max": int(m["nnz_max"]),
+                          "dead_frac": dead})
+    held = next(SyntheticLM(cfg.vocab_size, BATCH, SEQ, seed=seed + 999))
+    held = {k: jnp.asarray(v) for k, v in held.items()}
+    _, (hm, aux) = loss_eval(params, held)
+    return {"params": params, "curve": curve, "ce": float(hm["ce"]),
+            "nnz": float(hm["nnz_mean"]), "nnz_max": int(hm["nnz_max"]),
+            "aux": aux, "cfg": cfg}
+
+
+def timeit(fn: Callable, *args, iters=20, warmup=3) -> float:
+    """median wall microseconds per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)

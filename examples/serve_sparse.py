@@ -1,0 +1,47 @@
+"""Batched sparse serving: the paper's two-kernel inference pipeline
+(TwELL pack -> fused up+down projection, Eq. 3) end to end, compared against
+the dense path for identical outputs.
+
+  PYTHONPATH=src python examples/serve_sparse.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.models import lm
+
+
+def main():
+    base = get_config("paper-0.5b").reduced()
+    key = jax.random.PRNGKey(0)
+    prompt = jax.random.randint(key, (4, 16), 0, base.vocab_size, jnp.int32)
+
+    outs = {}
+    for impl in ["dense", "gather"]:
+        cfg = dataclasses.replace(base, sparsity=dataclasses.replace(
+            base.sparsity, ffn_impl=impl, twell_c=1))
+        params = lm.init(key, cfg)
+        t0 = time.time()
+        toks = generate(params, cfg, prompt, steps=16, cache_len=48)
+        outs[impl] = np.asarray(toks)
+        print(f"impl={impl:7s} generated {toks.shape} in "
+              f"{time.time() - t0:.2f}s")
+
+    match = (outs["dense"] == outs["gather"]).mean()
+    print(f"\ntoken agreement dense vs TwELL-fused path: {match:.2%}")
+    assert match == 1.0, "sparse path must be numerically faithful"
+    print("TwELL inference path reproduces the dense model exactly.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Sparsity analysis (paper Sec. 4.3 / Figs. 6-7): where does a sparse LLM
+spend its activations? Per-layer humps, per-position decay, per-token
+extremes — printed as ASCII charts.
+
+  PYTHONPATH=src python examples/sparsity_analysis.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BATCH, SEQ, tiny_cfg, train_tiny
+from repro.data.pipeline import SyntheticLM
+from repro.models import lm
+from repro.models.layers import norm_apply
+
+
+def bar(v, vmax, width=40):
+    return "#" * int(width * v / max(vmax, 1e-9))
+
+
+def main():
+    print("training a 4-layer sparse model (l1=3.0, ~60s)...")
+    cfg = tiny_cfg(l1=3.0, layers=4)
+    r = train_tiny(cfg, steps=250)
+    params = r["params"]
+
+    batch = {k: jnp.asarray(v) for k, v in
+             next(SyntheticLM(cfg.vocab_size, BATCH, SEQ, seed=7)).items()}
+    _, aux = jax.jit(lambda p, b: lm.forward(p, b, cfg))(params, batch)
+    nnz = np.asarray(aux["nnz_mean"])
+    nmax = np.asarray(aux["nnz_max"])
+
+    print("\n== Fig. 6: per-layer mean (#) / max nnz ==")
+    for i, (m, mx) in enumerate(zip(nnz, nmax)):
+        print(f"layer {i:2d} mean={m:6.1f} max={mx:4d} |{bar(m, nnz.max())}|")
+    print(f"(paper: early-middle hump; max >> mean per layer)")
+
+    print("\n== Fig. 7b: nnz by sequence position ==")
+    p0 = jax.tree.map(lambda a: a[0], params["blocks"])
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    act = jax.nn.relu(norm_apply(cfg.norm, p0["ln2"], x).reshape(
+        -1, cfg.d_model) @ p0["ffn"]["wg"])
+    nnz_tok = np.asarray((act > 0).sum(-1)).reshape(BATCH, SEQ).mean(0)
+    for pos in [0, 1, 2, 4, 8, 16, 32, SEQ - 1]:
+        print(f"pos {pos:3d} nnz={nnz_tok[pos]:6.1f} "
+              f"|{bar(nnz_tok[pos], nnz_tok.max())}|")
+    print("(paper: first positions excite far more neurons)")
+
+    print("\n== Fig. 7a: most/least active tokens ==")
+    toks = np.asarray(batch["tokens"]).reshape(-1)
+    flat = np.asarray((act > 0).sum(-1))
+    per = {}
+    for t, n in zip(toks, flat):
+        per.setdefault(int(t), []).append(n)
+    avg = sorted((float(np.mean(v)), t) for t, v in per.items()
+                 if len(v) >= 2)
+    print("least active token ids:", [(t, round(a, 1)) for a, t in avg[:5]])
+    print("most active token ids: ", [(t, round(a, 1)) for a, t in avg[-5:]])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""End-to-end training driver (deliverable b): a ~100M-parameter paper-style
+sparse LLM trained for a few hundred steps with the full production stack —
+data pipeline, AdamW + cosine, L1 sparsity recipe, async checkpointing,
+auto-resume, watchdog.
+
+The full 100M configuration is the default *target*; on this CPU container
+pass ``--scale 0.125`` (the CI default below) to run the same code at 1/8
+width in minutes. All paths (config -> launcher -> checkpoint) are identical.
+
+  PYTHONPATH=src python examples/train_100m.py --steps 300 --scale 0.125
+  PYTHONPATH=src python examples/train_100m.py --steps 300 --full   # 100M
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train as train_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--scale", type=float, default=0.125)
+    ap.add_argument("--full", action="store_true",
+                    help="true ~100M params (slow on CPU)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m")
+    args = ap.parse_args()
+
+    # ~100M-param geometry: 12L x d768 x ff2048, GPT2-ish vocab (the paper's
+    # family scaled down one notch from its 0.5B/8L point).
+    scale = 1.0 if args.full else args.scale
+    width = max(64, int(768 * scale) // 16 * 16)
+    layers = 12 if args.full else max(2, int(12 * scale + 0.5))
+    argv = ["--arch", "paper-0.5b", "--reduced",
+            "--width", str(width), "--layers", str(layers),
+            "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+            "--l1", "1.0", "--lr", "3e-3",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+            "--log-every", "20",
+            "--metrics-out", os.path.join(args.ckpt_dir, "metrics.json")]
+    print(f"[train_100m] width={width} layers={layers} steps={args.steps} "
+          f"(~{width*width*4*3*layers/1e6:.1f}M FFN+attn params)")
+    hist = train_cli.main(argv)
+    print(f"[train_100m] ce {hist[0]['ce']:.3f} -> {hist[-1]['ce']:.3f}; "
+          f"nnz {hist[0]['nnz_mean']:.0f} -> {hist[-1]['nnz_mean']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Architecture registry: one module per assigned architecture (+ the paper's own).
+
+``get_config(name)`` accepts the public dashed id (e.g. ``mixtral-8x22b``).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+# public id -> module name
+_REGISTRY: Dict[str, str] = {
+    "mixtral-8x22b": "mixtral_8x22b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "deepseek-67b": "deepseek_67b",
+    "phi3-mini-3.8b": "phi3_mini_3p8b",
+    "olmo-1b": "olmo_1b",
+    "llama3-405b": "llama3_405b",
+    "whisper-large-v3": "whisper_large_v3",
+    "llama-3.2-vision-11b": "llama_3p2_vision_11b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "rwkv6-7b": "rwkv6_7b",
+    "paper-1.5b": "paper_1p5b",
+    "paper-0.5b": "paper_0p5b",
+}
+
+ALL_ARCHS: List[str] = [k for k in _REGISTRY if not k.startswith("paper-")]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[name]}")
+    return mod.CONFIG
+
+
+def list_archs() -> List[str]:
+    return list(ALL_ARCHS)

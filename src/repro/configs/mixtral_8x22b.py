@@ -1,0 +1,22 @@
+"""mixtral-8x22b — 56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768,
+MoE 8 experts top-2, sliding-window attention. [arXiv:2401.04088; hf]"""
+from repro.config import ModelConfig, SparsityConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    num_experts=8,
+    top_k=2,
+    window=4096,                     # SWA -> sub-quadratic; long_500k runnable
+    rope_theta=1e6,
+    opt_state_dtype="bfloat16",      # 141B params: bf16 moments to fit one pod
+    sparsity=SparsityConfig(enabled=True, l1_coeff=2e-5),
+    source="arXiv:2401.04088; hf",
+)

@@ -1,0 +1,150 @@
+"""Hybrid sparse format for training (paper Sec. 3.4), pure-jnp reference.
+
+Rows (tokens) whose non-zero count fits the aggressively narrow ELL width go
+into fixed-width ELL arrays; rows that overflow are routed to a statically
+pre-allocated dense backup. All shapes are static (jit-stable) — the paper
+uses the same static pre-allocation + overflow-flag contract (App. B.2.1).
+
+Deviation from the CUDA implementation (documented in DESIGN.md §2): the ELL
+arrays keep one slot-row per token (dense-row entries zeroed) instead of a
+dynamically compacted ``M_s``-row matrix; this keeps every shape static for
+XLA while preserving the algorithmic contract (no dense M×N storage: the ELL
+arrays are ``M × ELL_W`` with ``ELL_W ≪ N``, the backup is ``M_d × N`` with
+``M_d = M/8``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class HybridActs(NamedTuple):
+    ell_values: jax.Array   # (M, ELL_W)
+    ell_indices: jax.Array  # (M, ELL_W) int32 column indices (0 where invalid)
+    row_nnz: jax.Array      # (M,) int32 true per-row counts
+    is_dense: jax.Array     # (M,) bool h_b: row lives in the dense backup
+    dense_rows: jax.Array   # (M_d, N) dense backup
+    dense_map: jax.Array    # (M_d,) int32 source row ids (-1 = empty)
+    overflow: jax.Array     # () bool: ran out of backup rows
+    n: int
+
+    @property
+    def ell_width(self) -> int:
+        return self.ell_values.shape[1]
+
+
+def pack(h: jax.Array, ell_width: int, num_dense_rows: int,
+         mask: jax.Array | None = None) -> HybridActs:
+    """Partition rows of (M, N) into narrow ELL + dense backup."""
+    m, n = h.shape
+    if mask is None:
+        mask = h != 0
+    row_nnz = mask.sum(axis=-1).astype(jnp.int32)
+    is_dense = row_nnz > ell_width
+
+    # --- ELL side: compact the first ELL_W non-zeros of each sparse row -----
+    order = jnp.argsort(jnp.where(mask, 0, 1), axis=-1, stable=True)
+    first = order[:, :ell_width]                                # (M, ELL_W)
+    vals = jnp.take_along_axis(h, first, axis=-1)
+    slot = jnp.arange(ell_width, dtype=jnp.int32)
+    valid = (slot[None, :] < row_nnz[:, None]) & (~is_dense)[:, None]
+    ell_values = jnp.where(valid, vals, 0).astype(h.dtype)
+    ell_indices = jnp.where(valid, first.astype(jnp.int32), 0)
+
+    # --- dense backup: scatter overflowing rows into preallocated slots -----
+    slot_id = jnp.cumsum(is_dense.astype(jnp.int32)) - 1        # (M,)
+    fits = is_dense & (slot_id < num_dense_rows)
+    overflow = jnp.any(is_dense & (slot_id >= num_dense_rows))
+    tgt = jnp.where(fits, slot_id, num_dense_rows)              # OOB drops
+    dense_rows = jnp.zeros((num_dense_rows + 1, n), h.dtype).at[tgt].add(
+        jnp.where(fits[:, None], jnp.where(mask, h, 0), 0)
+    )[:num_dense_rows]
+    dense_map = jnp.full((num_dense_rows + 1,), -1, jnp.int32).at[tgt].set(
+        jnp.where(fits, jnp.arange(m, dtype=jnp.int32), -1)
+    )[:num_dense_rows]
+    return HybridActs(ell_values, ell_indices, row_nnz, is_dense,
+                      dense_rows, dense_map, overflow, n)
+
+
+def unpack(hy: HybridActs) -> jax.Array:
+    """Scatter hybrid back to dense (M, N)."""
+    m = hy.ell_values.shape[0]
+    slot = jnp.arange(hy.ell_width, dtype=jnp.int32)
+    valid = (slot[None, :] < hy.row_nnz[:, None]) & (~hy.is_dense)[:, None]
+    vals = jnp.where(valid, hy.ell_values, 0)
+    rows = jnp.arange(m, dtype=jnp.int32)[:, None].repeat(hy.ell_width, 1)
+    dense = jnp.zeros((m, hy.n), hy.ell_values.dtype)
+    dense = dense.at[rows.reshape(-1), hy.ell_indices.reshape(-1)].add(vals.reshape(-1))
+    ok = hy.dense_map >= 0
+    tgt = jnp.where(ok, hy.dense_map, m)
+    dense = jnp.concatenate([dense, jnp.zeros((1, hy.n), dense.dtype)])
+    dense = dense.at[tgt].add(jnp.where(ok[:, None], hy.dense_rows, 0))
+    return dense[:m]
+
+
+def hybrid_to_dense_matmul(hy: HybridActs, w: jax.Array) -> jax.Array:
+    """Algorithm 3: ``y = h @ w`` with h in hybrid format, (M,N)x(N,K)->(M,K).
+
+    ELL rows use gathered-row accumulation; backup rows use a dense matmul
+    (the Tensor-Core / MXU path) scattered back by ``dense_map``.
+    """
+    m = hy.ell_values.shape[0]
+    slot = jnp.arange(hy.ell_width, dtype=jnp.int32)
+    valid = (slot[None, :] < hy.row_nnz[:, None]) & (~hy.is_dense)[:, None]
+    vals = jnp.where(valid, hy.ell_values, 0)
+    w_rows = w[hy.ell_indices]                                   # (M, ELL_W, K)
+    y = jnp.einsum("me,mek->mk", vals.astype(jnp.float32),
+                   w_rows.astype(jnp.float32))
+    y_dense = hy.dense_rows.astype(jnp.float32) @ w.astype(jnp.float32)
+    ok = hy.dense_map >= 0
+    tgt = jnp.where(ok, hy.dense_map, m)
+    y = jnp.concatenate([y, jnp.zeros((1, y.shape[1]), y.dtype)])
+    y = y.at[tgt].add(jnp.where(ok[:, None], y_dense, 0))[:m]
+    return y.astype(w.dtype)
+
+
+def dense_to_hybrid_matmul(x: jax.Array, w: jax.Array, pattern: HybridActs) -> HybridActs:
+    """Listing 5: compute only the entries of ``x @ w`` selected by ``pattern``.
+
+    Returns a HybridActs with the same indices/partitioning as ``pattern`` and
+    values replaced by the masked matmul result. Used for h_u in the forward
+    pass and for ``grad_h = grad_y @ W_d^T`` in the backward pass.
+    """
+    m = x.shape[0]
+    w_cols = w.T[pattern.ell_indices]                            # (M, ELL_W, K)
+    vals = jnp.einsum("mk,mek->me", x.astype(jnp.float32),
+                      w_cols.astype(jnp.float32))
+    slot = jnp.arange(pattern.ell_width, dtype=jnp.int32)
+    valid = (slot[None, :] < pattern.row_nnz[:, None]) & (~pattern.is_dense)[:, None]
+    vals = jnp.where(valid, vals, 0).astype(w.dtype)
+
+    ok = pattern.dense_map >= 0
+    src = jnp.where(ok, pattern.dense_map, 0)
+    xd = jnp.where(ok[:, None], x[src], 0)                       # (M_d, K)
+    dmask = pattern.dense_rows != 0
+    dense_vals = jnp.where(dmask, (xd.astype(jnp.float32) @ w.astype(jnp.float32)), 0)
+    return pattern._replace(ell_values=vals, dense_rows=dense_vals.astype(w.dtype))
+
+
+def transpose(hy: HybridActs, m_rows: int, ell_width: int,
+              num_dense_rows: int) -> HybridActs:
+    """Listing 7 reference: hybrid -> dense -> transpose -> hybrid."""
+    return pack(unpack(hy).T, ell_width, num_dense_rows)
+
+
+def elementwise(hy: HybridActs, other_vals_ell: jax.Array,
+                other_dense: jax.Array, op) -> HybridActs:
+    """Apply an elementwise op on the shared sparsity pattern."""
+    return hy._replace(ell_values=op(hy.ell_values, other_vals_ell),
+                       dense_rows=op(hy.dense_rows, other_dense))
+
+
+def memory_bytes(hy: HybridActs) -> int:
+    """Static storage cost of the packed representation (for §Perf accounting)."""
+    total = 0
+    for a in [hy.ell_values, hy.ell_indices, hy.row_nnz, hy.is_dense,
+              hy.dense_rows, hy.dense_map]:
+        total += a.size * a.dtype.itemsize
+    return total

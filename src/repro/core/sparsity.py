@@ -1,0 +1,97 @@
+"""Sparsity-induction recipe (paper Sec. 2.2) + analysis instrumentation.
+
+- activation functions (ReLU default; SiLU baseline; ReLU^2 for rwkv channel-mix)
+- the L1 loss over hidden activations (Eq. 2)
+- per-layer / per-token sparsity statistics (Sec. 4.3, Figs. 6-7)
+- dead-neuron tracking and the two mitigation strategies of App. C.3:
+  L1-coefficient warm-up and targeted gate-column reinitialization (Eq. 6).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def activation(name: str):
+    if name == "relu":
+        return jax.nn.relu
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def activation_grad(name: str, h: jax.Array):
+    """sigma'(z) expressed through the *post*-activation value h (valid on the
+    non-zero pattern, where z is recoverable from h)."""
+    if name == "relu":
+        return jnp.ones_like(h)
+    if name == "relu2":
+        return 2.0 * jnp.sqrt(jnp.maximum(h, 0))
+    raise ValueError(f"pattern-only backward undefined for {name!r}")
+
+
+def l1_loss(h: jax.Array) -> jax.Array:
+    """Per-layer mean |h| term of Eq. 2 (the 1/L average is taken by the model)."""
+    return jnp.mean(jnp.abs(h.astype(jnp.float32)))
+
+
+def l1_schedule(step: jax.Array, l1_coeff: float, constant_steps: int,
+                warmup_steps: int) -> jax.Array:
+    """App. C.3 sparsity warm-up: 0 for `constant_steps`, then linear ramp."""
+    if warmup_steps <= 0:
+        return jnp.asarray(l1_coeff, jnp.float32)
+    t = (step - constant_steps) / warmup_steps
+    return l1_coeff * jnp.clip(t, 0.0, 1.0).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# statistics (Sec. 4.3)
+# --------------------------------------------------------------------------- #
+
+def layer_stats(h: jax.Array) -> Dict[str, jax.Array]:
+    """nnz statistics of one layer's hidden activations (tokens, N)."""
+    nnz = (h != 0).sum(axis=-1)
+    return {
+        "nnz_mean": nnz.mean().astype(jnp.float32),
+        "nnz_max": nnz.max().astype(jnp.int32),
+        "active_frac": (h != 0).mean().astype(jnp.float32),
+        "l1": l1_loss(h),
+    }
+
+
+def position_nnz(h: jax.Array, batch: int, seq: int) -> jax.Array:
+    """Average nnz per sequence position (Fig. 7b). h: (batch*seq, N)."""
+    nnz = (h != 0).sum(axis=-1).reshape(batch, seq)
+    return nnz.mean(axis=0).astype(jnp.float32)
+
+
+def update_dead_mask(ever_active: jax.Array, h: jax.Array) -> jax.Array:
+    """OR-accumulate per-neuron activity over a step (App. D.1 definition:
+    a neuron is dead for a step if it never fired in ~1M tokens)."""
+    return ever_active | jnp.any(h != 0, axis=tuple(range(h.ndim - 1)))
+
+
+def dead_fraction(ever_active: jax.Array) -> jax.Array:
+    return 1.0 - ever_active.mean(dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# targeted dead-neuron reinitialization (Eq. 6)
+# --------------------------------------------------------------------------- #
+
+def targeted_reinit(key: jax.Array, w_gate: jax.Array, dead: jax.Array,
+                    lam: float = 0.1, sigma: float = 0.02) -> jax.Array:
+    """W_g[:, j] <- (1-lam) W_g[:, j] + lam N(0, sigma^2) for dead columns j.
+
+    Applied after every optimizer step (App. C.3); cheap and jit-compatible.
+    ``dead``: (N,) bool — neurons that never fired during the last window.
+    """
+    noise = sigma * jax.random.normal(key, w_gate.shape, w_gate.dtype)
+    blended = (1.0 - lam) * w_gate + lam * noise
+    return jnp.where(dead[None, :], blended, w_gate)

@@ -1,0 +1,117 @@
+"""TwELL — Tile-wise ELLPACK (paper Sec. 3.2), pure-jnp reference semantics.
+
+An ``(M, N)`` activation matrix is divided into horizontal 1-D tiles of width
+``T``; within each tile the non-zero values and their *global* column indices
+are compacted to the start of a ``T/C``-wide slot (compression ratio ``C``).
+A per-tile non-zero count ``nnz`` (shape ``(M, N_T)``) completes the format.
+
+These functions define the exact semantics the Pallas kernels must reproduce
+(see ``repro/kernels/twell_pack.py``); they are also used directly as the CPU
+execution path. Overflowing tiles follow the paper's contract (App. B.2.1):
+excess values are discarded and an overflow flag is raised for the host to
+resize + replay the step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TwellActs(NamedTuple):
+    values: jax.Array    # (M, N/C)  packed non-zero values, tile-locally aligned
+    indices: jax.Array   # (M, N/C)  int32 global column indices (0 where invalid)
+    nnz: jax.Array       # (M, N_T)  int32 per-tile non-zero counts (clipped to T/C)
+    overflow: jax.Array  # ()        bool: any tile exceeded T/C slots
+    tile: int
+    compression: int
+    n: int               # original N
+
+    @property
+    def n_tiles(self) -> int:
+        return self.n // self.tile
+
+    @property
+    def slot_width(self) -> int:
+        return self.tile // self.compression
+
+
+def pack(h: jax.Array, tile: int, compression: int,
+         mask: jax.Array | None = None) -> TwellActs:
+    """Pack a dense (M, N) matrix into TwELL (Algorithm 1 epilogue semantics)."""
+    m, n = h.shape
+    assert n % tile == 0, f"N={n} not divisible by tile T={tile}"
+    assert tile % compression == 0
+    nt, tc = n // tile, tile // compression
+    if mask is None:
+        mask = h != 0
+
+    ht = h.reshape(m, nt, tile)
+    mt = mask.reshape(m, nt, tile)
+    # Stable argsort moves non-zero positions (key 0) before zeros (key 1),
+    # preserving column order inside the tile -- identical to the kernel's
+    # running-count scatter.
+    order = jnp.argsort(jnp.where(mt, 0, 1), axis=-1, stable=True)
+    first = order[..., :tc]                                    # (M, NT, T/C)
+    vals = jnp.take_along_axis(ht, first, axis=-1)
+    taken_valid = jnp.take_along_axis(mt, first, axis=-1)
+    counts = mt.sum(axis=-1).astype(jnp.int32)                 # (M, NT)
+    overflow = jnp.any(counts > tc)
+    slot = jnp.arange(tc, dtype=jnp.int32)
+    valid = taken_valid & (slot[None, None, :] < counts[..., None])
+    vals = jnp.where(valid, vals, 0).astype(h.dtype)
+    gidx = first.astype(jnp.int32) + (jnp.arange(nt, dtype=jnp.int32) * tile)[None, :, None]
+    gidx = jnp.where(valid, gidx, 0)
+    return TwellActs(vals.reshape(m, nt * tc), gidx.reshape(m, nt * tc),
+                     jnp.minimum(counts, tc), overflow, tile, compression, n)
+
+
+def unpack(tw: TwellActs) -> jax.Array:
+    """Scatter TwELL back to a dense (M, N) matrix."""
+    m = tw.values.shape[0]
+    nt, tc = tw.n_tiles, tw.slot_width
+    vals = tw.values.reshape(m, nt, tc)
+    idx = tw.indices.reshape(m, nt, tc) - (jnp.arange(nt, dtype=jnp.int32) * tw.tile)[None, :, None]
+    slot = jnp.arange(tc, dtype=jnp.int32)
+    valid = slot[None, None, :] < tw.nnz[..., None]
+    vals = jnp.where(valid, vals, 0)
+    idx = jnp.clip(idx, 0, tw.tile - 1)
+    dense = jnp.zeros((m, nt, tw.tile), tw.values.dtype)
+    dense = jax.vmap(jax.vmap(lambda d, i, v: d.at[i].add(v)))(dense, idx, vals)
+    return dense.reshape(m, tw.n)
+
+
+def nnz_per_row(tw: TwellActs) -> jax.Array:
+    return tw.nnz.sum(axis=-1)
+
+
+def fused_ffn_reference(x: jax.Array, tw: TwellActs, w_u: jax.Array,
+                        w_d: jax.Array) -> jax.Array:
+    """Eq. 3 — fused up+down projection from TwELL gate activations.
+
+    y[m,:] = sum_c h_v[m,c] * (x[m,:] . W_u[:, n_c]) * W_d[n_c, :]
+
+    Reference gathers full weight rows/columns; the kernels avoid the
+    materialization. Numerically identical to ``(hu * unpack(tw)) @ w_d``.
+    """
+    m = x.shape[0]
+    tc = tw.slot_width
+    slot = jnp.arange(tw.values.shape[1], dtype=jnp.int32) % tc
+    valid = slot[None, :] < jnp.repeat(tw.nnz, tc, axis=-1)
+    vals = jnp.where(valid, tw.values, 0)
+    wu_cols = w_u.T[tw.indices]                    # (M, N/C, K)
+    hu = jnp.einsum("mk,mck->mc", x, wu_cols)      # sparse h_u elements
+    contrib = (vals * hu)[..., None] * w_d[tw.indices]   # (M, N/C, K)
+    return contrib.sum(axis=1).astype(x.dtype)
+
+
+def tile_activity(tw: TwellActs, row_block: int) -> jax.Array:
+    """Per-(row-block, tile) activity: max nnz within the block.
+
+    This is the quantity the TPU tile-skip kernel consumes: a tile is dead for
+    a whole row block iff every row's count is zero (DESIGN.md §2).
+    """
+    m, nt = tw.nnz.shape
+    assert m % row_block == 0
+    return tw.nnz.reshape(m // row_block, row_block, nt).max(axis=1)

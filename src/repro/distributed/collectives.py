@@ -1,0 +1,57 @@
+"""Explicit distributed attention primitives.
+
+``flash_decode_attention``: decode attention against a *sequence-sharded*
+KV cache (the fallback layout the cache rule engine picks whenever
+kv_heads < TP degree — mixtral/deepseek/llama3/vlm decode cells). Each
+model shard scores its local KV slice, and only the online-softmax
+statistics cross the wire:
+
+    payload/step = psum( num (B,H,hd) + den (B,H) + max (B,H) )
+
+versus all-gathering the KV slice itself (B, S/tp, Hkv, hd) — a ~S/tp x
+reduction. The GSPMD partitioner usually discovers an equivalent schedule
+from the einsum formulation; this explicit shard_map version pins it (and
+is the template for the ring-attention extension).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def flash_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           length: jax.Array, mesh, axis: str = "model",
+                           ) -> jax.Array:
+    """q: (B, 1, H, hd) replicated over `axis`; k, v: (B, S, H, hd) sharded
+    on S over `axis` (kv already repeated to H); length: () valid prefix.
+    Returns (B, 1, H, hd)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    tp = dict(mesh.shape)[axis]
+    s_local = k.shape[1] // tp
+
+    def local(q, kl, vl, length):
+        idx = jax.lax.axis_index(axis)
+        kpos = idx * s_local + jnp.arange(s_local)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kl).astype(jnp.float32)
+        logits = logits * scale
+        logits = jnp.where((kpos < length)[None, None, None, :], logits,
+                           -1e30)
+        m_loc = logits.max(axis=-1)                        # (B, H, 1)
+        m = jax.lax.pmax(m_loc, axis)
+        p = jnp.exp(logits - m[..., None])
+        num = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), vl)
+        den = p.sum(axis=-1)                               # (B, H, 1)
+        num = jax.lax.psum(num.astype(jnp.float32), axis)
+        den = jax.lax.psum(den, axis)
+        return (num / jnp.maximum(den, 1e-30).transpose(0, 2, 1)[..., None]
+                ).astype(q.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None),
+                  P()),
+        out_specs=P(),
+        axis_names={axis}, check_vma=False)(q, k, v, length)

@@ -1,0 +1,209 @@
+"""Sharding rule engine: assigns PartitionSpecs to every parameter / cache /
+activation from path-based logical rules with divisibility-checked fallbacks.
+
+Strategy (DESIGN.md §5):
+- TP over the ``model`` axis: attention heads, MLP hidden, vocab, experts (EP
+  when the expert count divides the axis).
+- FSDP (ZeRO-3) over the ``data`` axis: after TP assignment, the largest
+  still-unsharded dimension that the data-axis size divides is sharded; XLA
+  inserts the per-layer all-gathers (params) and reduce-scatters (grads).
+- ``pod`` is an outer pure-DP axis: params replicated across pods, gradient
+  all-reduce crosses pod links.
+- Fallbacks are explicit: e.g. whisper (20 heads) and llama4-scout (40 heads)
+  don't divide a 16-way model axis -> attention stays FSDP-only while the FFN
+  is TP; decode KV caches whose kv-head count doesn't divide shard the
+  *sequence* dim over ``model`` (flash-decoding style, XLA inserts the
+  softmax-reduction collectives).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axes(mesh) -> Dict[str, int]:
+    return dict(mesh.shape)        # works for Mesh and AbstractMesh
+
+
+def dp_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_spec(mesh: Mesh):
+    axes = dp_axes_of(mesh)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh_axes(mesh).get("model", 1)
+
+
+def data_size(mesh: Mesh) -> int:
+    return mesh_axes(mesh).get("data", 1)
+
+
+# --------------------------------------------------------------------------- #
+# parameter rules
+# --------------------------------------------------------------------------- #
+
+def _tp_col(cfg, mesh, n_heads_like: int) -> bool:
+    """May a flattened heads*hd (or mlp/vocab) column dim go on `model`?"""
+    return n_heads_like % tp_size(mesh) == 0
+
+
+def param_spec(path: str, shape: Tuple[int, ...], cfg, mesh: Mesh,
+               fsdp: bool = True) -> P:
+    tp = tp_size(mesh)
+    dsz = data_size(mesh)
+    spec: list = [None] * len(shape)
+
+    def put(dim: int, axis: str) -> bool:
+        if dim < 0:
+            dim += len(shape)
+        if spec[dim] is None and shape[dim] % {"model": tp}.get(axis, 1) == 0:
+            spec[dim] = axis
+            return True
+        return False
+
+    heads_ok = cfg.num_heads % tp == 0
+    kv_ok = cfg.num_kv_heads % tp == 0 if cfg.num_kv_heads else False
+    ep = cfg.num_experts > 0 and cfg.num_experts % tp == 0
+
+    if re.search(r"(embed|lm_head)$", path):
+        put(-2, "model")                                   # vocab-sharded
+    elif re.search(r"experts.*w[ug]$", path):
+        # expert dim is -3 of (..., E, D, F) — layer stacking prepends dims,
+        # so never index from the left (found the hard way: EP on dim 0
+        # sharded the *layer* axis and forced full expert re-gathers)
+        put(-3, "model") if ep else put(-1, "model")       # EP else expert TP
+    elif re.search(r"experts.*wd$", path):
+        put(-3, "model") if ep else put(-2, "model")
+    elif re.search(r"router$", path):
+        pass                                               # small, replicated
+    elif re.search(r"attn.*w[q]$", path) or re.search(r"(^|/)w[rg]$", path):
+        if heads_ok:
+            put(-1, "model")
+    elif re.search(r"attn.*w[kv]$", path):
+        if kv_ok:
+            put(-1, "model")
+    elif re.search(r"attn.*wo$", path):
+        if heads_ok:
+            put(-2, "model")
+    elif re.search(r"(ffn|shared_ffn|cm).*(wu|wg)$", path) or re.search(r"wu$", path):
+        put(-1, "model")
+    elif re.search(r"(ffn|shared_ffn|cm).*wd$", path) or re.search(r"wd$", path):
+        put(-2, "model")
+    elif re.search(r"out_proj$", path):
+        put(-2, "model")                                   # mamba2 d_inner rows
+    elif re.search(r"(^|/)(wk|wv|wo)$", path):             # rwkv time-mix
+        if heads_ok:
+            put(-1 if not path.endswith("wo") else -2, "model")
+    # everything else (norms, conv, lora, biases, mix coeffs): replicated TP-wise
+
+    if fsdp and dsz > 1:
+        # ZeRO-3: shard the largest remaining dim divisible by the data size
+        cands = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in cands:
+            if spec[i] is None and shape[i] % dsz == 0 and shape[i] >= dsz:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def make_param_specs(params_shapes: Any, cfg, mesh: Mesh,
+                     fsdp: bool = True) -> Any:
+    """params_shapes: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        specs.append(param_spec(pstr, leaf.shape, cfg, mesh, fsdp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# --------------------------------------------------------------------------- #
+# cache rules (decode)
+# --------------------------------------------------------------------------- #
+
+def cache_spec(path: str, shape: Tuple[int, ...], cfg, mesh: Mesh) -> P:
+    """KV / SSM caches. Layout conventions (leading layer-stack dim):
+    k,v: (L, B, S, Hkv, hd); state: (L, B, H, hd, N); conv: (L, B, W, C);
+    wkv: (L, B, H, hd, hd); shift: (L, B, D); xk/xv: (L, B, P, Hkv, hd)."""
+    tp = tp_size(mesh)
+    dsz = data_size(mesh)
+    dp = dp_spec(mesh)
+    spec: list = [None] * len(shape)
+    if len(shape) >= 2 and shape[1] % max(dsz, 1) == 0 and dsz > 1:
+        spec[1] = dp                                        # batch over data(+pod)
+    if re.search(r"(^|/)(k|v|xk|xv)$", path) and len(shape) == 5:
+        if cfg.num_kv_heads % tp == 0:
+            spec[3] = "model"                               # kv heads
+        elif shape[2] % tp == 0:
+            spec[2] = "model"                               # seq (flash-decoding)
+    elif re.search(r"(state|wkv)$", path) and len(shape) == 5:
+        if shape[2] % tp == 0:
+            spec[2] = "model"                               # ssm heads
+    return P(*spec)
+
+
+def make_cache_specs(cache_shapes: Any, cfg, mesh: Mesh) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        specs.append(cache_spec(pstr, leaf.shape, cfg, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --------------------------------------------------------------------------- #
+# activation constraints
+# --------------------------------------------------------------------------- #
+
+def shard_act(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint that degrades to a no-op when no mesh axes of
+    the spec exist (single-device smoke tests) or dims don't divide."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    clean = []
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            clean.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if a in sizes)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if axes and x.shape[dim] % total == 0:
+            clean.append(axes if len(axes) > 1 else axes[0])
+        else:
+            clean.append(None)
+    if all(c is None for c in clean):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*clean))
+
+
+def batch_spec(ndim: int, mesh: Mesh, batch_size: int = 0) -> P:
+    """Leading-dim DP sharding; falls back toward fewer axes (then replication)
+    when the batch doesn't divide (e.g. long_500k's global_batch=1)."""
+    axes = dp_axes_of(mesh)
+    sizes = mesh_axes(mesh)
+    while axes:
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if batch_size == 0 or batch_size % total == 0:
+            dp = axes if len(axes) > 1 else axes[0]
+            return P(dp, *([None] * (ndim - 1)))
+        axes = axes[1:]
+    return P(*([None] * ndim))

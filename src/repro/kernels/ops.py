@@ -1,0 +1,78 @@
+"""jit'd public wrappers for the Pallas kernels with CPU dispatch.
+
+On TPU the Pallas kernels run compiled; on CPU (this container) they are
+exercised in interpret mode by the tests/benches, while the *execution* path
+used by models falls back to the numerically-identical jnp references —
+interpret mode is a correctness vehicle, far too slow for model-sized runs.
+
+Set REPRO_KERNELS=interpret to force interpret-mode kernels everywhere
+(used by the per-kernel allclose test sweeps).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import twell
+from repro.kernels import ref
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_KERNELS", "")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def twell_gate_matmul(x, w, tile: int, compression: int, act: str = "relu"
+                      ) -> twell.TwellActs:
+    mode = _mode()
+    if mode == "ref":
+        return ref.twell_gate_matmul(x, w, tile, compression, act)
+    from repro.kernels.twell_pack import twell_gate_matmul_pallas
+    vals, idx, nnz = twell_gate_matmul_pallas(
+        x, w, tile, compression, act, interpret=(mode == "interpret"))
+    tc = tile // compression
+    overflow = jnp.any(nnz > tc)
+    return twell.TwellActs(vals, idx, jnp.minimum(nnz, tc), overflow,
+                           tile, compression, w.shape[1])
+
+
+def twell_fused_ffn(x, tw: twell.TwellActs, wu, wd):
+    mode = _mode()
+    if mode == "ref":
+        return ref.twell_fused_ffn(x, tw, wu, wd)
+    from repro.kernels.sparse_ffn import twell_fused_ffn_pallas
+    y = twell_fused_ffn_pallas(tw.values, tw.indices, tw.nnz, x, wu, wd,
+                               tw.tile, interpret=(mode == "interpret"))
+    return y.astype(x.dtype)
+
+
+def twell_down_proj(tw: twell.TwellActs, wd):
+    mode = _mode()
+    if mode == "ref":
+        return ref.twell_down_proj(tw, wd)
+    from repro.kernels.sparse_ffn import twell_down_proj_pallas
+    y = twell_down_proj_pallas(tw.values, tw.indices, tw.nnz, wd, tw.tile,
+                               interpret=(mode == "interpret"))
+    return y.astype(wd.dtype)
+
+
+def tile_skip_ffn(x, wg, wu, wd, tile: int, act: str = "relu"):
+    mode = _mode()
+    if mode == "ref":
+        return ref.tile_skip_ffn(x, wg, wu, wd, tile, act)
+    from repro.kernels.sparse_ffn import tile_skip_ffn_pallas
+    y, h = tile_skip_ffn_pallas(x, wg, wu, wd, tile, act,
+                                interpret=(mode == "interpret"))
+    return y.astype(x.dtype), h
+
+
+def flash_attention(q, k, v):
+    mode = _mode()
+    if mode == "ref":
+        return ref.flash_attention(q, k, v)
+    from repro.kernels.flash_attention import flash_attention_pallas
+    return flash_attention_pallas(q, k, v, interpret=(mode == "interpret"))

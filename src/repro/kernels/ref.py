@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hybrid as hybrid_fmt
+from repro.core import twell
+from repro.core.sparsity import activation
+
+
+def twell_gate_matmul(x, w, tile: int, compression: int, act: str = "relu"
+                      ) -> twell.TwellActs:
+    """Algorithm 1: h = act(x @ w) packed to TwELL (pattern = h > 0)."""
+    h = activation(act)(jnp.dot(x, w, preferred_element_type=jnp.float32))
+    h = h.astype(x.dtype)
+    return twell.pack(h, tile, compression, mask=h > 0)
+
+
+def twell_fused_ffn(x, tw: twell.TwellActs, wu, wd) -> jax.Array:
+    """Eq. 3. Dense-equivalent formulation (cheap oracle)."""
+    hg = twell.unpack(tw)
+    hu = jnp.dot(x, wu, preferred_element_type=jnp.float32).astype(x.dtype)
+    return jnp.dot(hu * hg, wd, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def twell_down_proj(tw: twell.TwellActs, wd) -> jax.Array:
+    """Non-gated variant (App. C.2): y = unpack(h) @ wd."""
+    h = twell.unpack(tw)
+    return jnp.dot(h, wd, preferred_element_type=jnp.float32).astype(h.dtype)
+
+
+def tile_skip_ffn(x, wg, wu, wd, tile: int, act: str = "relu"):
+    """Gated FFN, dense math (tile-skipping is numerically identity)."""
+    hg = activation(act)(jnp.dot(x, wg, preferred_element_type=jnp.float32)
+                         ).astype(x.dtype)
+    hu = jnp.dot(x, wu, preferred_element_type=jnp.float32).astype(x.dtype)
+    h = hu * hg
+    y = jnp.dot(h, wd, preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, h
+
+
+def hybrid_to_dense(hy: hybrid_fmt.HybridActs, w) -> jax.Array:
+    return hybrid_fmt.hybrid_to_dense_matmul(hy, w)
+
+
+def dense_to_hybrid(x, w, pattern: hybrid_fmt.HybridActs) -> hybrid_fmt.HybridActs:
+    return hybrid_fmt.dense_to_hybrid_matmul(x, w, pattern)
+
+
+def flash_attention(q, k, v, causal: bool = True) -> jax.Array:
+    """(B, S, H, hd) causal attention oracle (f32 softmax)."""
+    s = q.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        pos = jnp.arange(s)
+        logits = jnp.where((pos[:, None] >= pos[None, :])[None, None],
+                           logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v)

@@ -1,0 +1,184 @@
+"""Pallas-TPU kernel: tile-skip fused up+down projection from TwELL.
+
+The TPU harvest of the paper's Eq. 3 (DESIGN.md §2): per-(row-block x
+hidden-tile) activity comes free from the TwELL counts; dead tiles skip the
+W_u / W_d MXU work entirely (@pl.when), and h_u is materialized only in VMEM
+(never to HBM) exactly as the CUDA kernel keeps it in registers. On real
+hardware the W DMAs for dead tiles are additionally elided via the
+scalar-prefetch index-map remap (see `_wu_index_map`): dead tiles re-point at
+block 0, which Pallas' double buffering turns into a no-op re-fetch.
+
+Grid: (M/bm, N/T); full-K blocks (VMEM budget: (bm + 2T) * K * bytes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, idx_ref, nnz_ref, x_ref, wu_ref, wd_ref, y_ref, *,
+            tile: int, tc: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    active = jnp.max(nnz_ref[...]) > 0
+
+    @pl.when(active)
+    def _compute():
+        # unpack the packed gate tile to a dense (bm, T) block, VMEM-local
+        local = idx_ref[...] - j * tile                    # (bm, tc)
+        slots = jax.lax.broadcasted_iota(jnp.int32, local.shape, 1)
+        valid = slots < nnz_ref[...]                       # (bm, tc)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (1, 1, tile), 2)
+        hit = (local[:, :, None] == cols) & valid[:, :, None]   # (bm, tc, T)
+        g = jnp.sum(jnp.where(hit, vals_ref[...][:, :, None].astype(jnp.float32),
+                              0.0), axis=1)                # (bm, T)
+        hu = jnp.dot(x_ref[...], wu_ref[...],
+                     preferred_element_type=jnp.float32)   # (bm, T)
+        h = (hu * g).astype(x_ref.dtype)
+        y_ref[...] += jnp.dot(h, wd_ref[...],
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "bm", "interpret"))
+def twell_fused_ffn_pallas(vals, idx, nnz, x, wu, wd, tile: int = 256,
+                           bm: int = 128, interpret: bool = True):
+    """vals/idx: (M, N/C), nnz: (M, N/T), x: (M, K), wu: (K, N), wd: (N, K)
+    -> y: (M, K) f32 (cast by the caller)."""
+    m, kdim = x.shape
+    n = wu.shape[1]
+    nt = n // tile
+    tc = vals.shape[1] // nt
+    bm = min(bm, m)
+    assert m % bm == 0
+    grid = (m // bm, nt)
+    kern = functools.partial(_kernel, tile=tile, tc=tc)
+    y = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, kdim), lambda i, j: (i, 0)),
+            pl.BlockSpec((kdim, tile), lambda i, j: (0, j)),
+            pl.BlockSpec((tile, kdim), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, kdim), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, kdim), jnp.float32),
+        interpret=interpret,
+    )(vals, idx, nnz, x, wu, wd)
+    return y
+
+
+def _down_kernel(vals_ref, idx_ref, nnz_ref, wd_ref, y_ref, *, tile: int):
+    """Non-gated variant (paper App. C.2, Listing 3): y = unpack(h) @ W_d
+    with tile skipping — the up projection produced the TwELL pattern."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    active = jnp.max(nnz_ref[...]) > 0
+
+    @pl.when(active)
+    def _compute():
+        local = idx_ref[...] - j * tile
+        slots = jax.lax.broadcasted_iota(jnp.int32, local.shape, 1)
+        valid = slots < nnz_ref[...]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (1, 1, tile), 2)
+        hit = (local[:, :, None] == cols) & valid[:, :, None]
+        h = jnp.sum(jnp.where(hit, vals_ref[...][:, :, None].astype(jnp.float32),
+                              0.0), axis=1)
+        y_ref[...] += jnp.dot(h.astype(wd_ref.dtype), wd_ref[...],
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "bm", "interpret"))
+def twell_down_proj_pallas(vals, idx, nnz, wd, tile: int = 256,
+                           bm: int = 128, interpret: bool = True):
+    m = vals.shape[0]
+    n, kdim = wd.shape
+    nt = n // tile
+    tc = vals.shape[1] // nt
+    bm = min(bm, m)
+    assert m % bm == 0
+    kern = functools.partial(_down_kernel, tile=tile)
+    y = pl.pallas_call(
+        kern,
+        grid=(m // bm, nt),
+        in_specs=[
+            pl.BlockSpec((bm, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((tile, kdim), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, kdim), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, kdim), jnp.float32),
+        interpret=interpret,
+    )(vals, idx, nnz, wd)
+    return y
+
+
+def _kernel_gated_dense_gate(x_ref, wg_ref, wu_ref, wd_ref, y_ref, h_ref, *,
+                             act: str):
+    """Single-kernel gated FFN with tile skipping decided *inside* (used when
+    the gate matmul and the fused projections are fused end-to-end)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    g = jnp.dot(x_ref[...], wg_ref[...], preferred_element_type=jnp.float32)
+    if act == "relu":
+        g = jnp.maximum(g, 0)
+    else:
+        g = jnp.square(jnp.maximum(g, 0))
+    active = jnp.any(g > 0)
+    h_ref[...] = jnp.zeros_like(h_ref)
+
+    @pl.when(active)
+    def _compute():
+        hu = jnp.dot(x_ref[...], wu_ref[...],
+                     preferred_element_type=jnp.float32)
+        h = hu * g
+        y_ref[...] += jnp.dot(h.astype(x_ref.dtype), wd_ref[...],
+                              preferred_element_type=jnp.float32)
+        h_ref[...] = h.astype(h_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "act", "bm", "interpret"))
+def tile_skip_ffn_pallas(x, wg, wu, wd, tile: int = 256, act: str = "relu",
+                         bm: int = 128, interpret: bool = True):
+    """End-to-end gated FFN with in-kernel tile skip; also emits dense h for
+    the sparsity statistics path. x: (M, K) -> (y (M, K) f32, h (M, N))."""
+    m, kdim = x.shape
+    n = wu.shape[1]
+    nt = n // tile
+    bm = min(bm, m)
+    assert m % bm == 0 and n % tile == 0
+    kern = functools.partial(_kernel_gated_dense_gate, act=act)
+    y, h = pl.pallas_call(
+        kern,
+        grid=(m // bm, nt),
+        in_specs=[
+            pl.BlockSpec((bm, kdim), lambda i, j: (i, 0)),
+            pl.BlockSpec((kdim, tile), lambda i, j: (0, j)),
+            pl.BlockSpec((kdim, tile), lambda i, j: (0, j)),
+            pl.BlockSpec((tile, kdim), lambda i, j: (j, 0)),
+        ],
+        out_specs=[pl.BlockSpec((bm, kdim), lambda i, j: (i, 0)),
+                   pl.BlockSpec((bm, tile), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((m, kdim), jnp.float32),
+                   jax.ShapeDtypeStruct((m, n), x.dtype)],
+        interpret=interpret,
+    )(x, wg, wu, wd)
+    return y, h

@@ -1,0 +1,100 @@
+"""Pallas-TPU kernel: fused gate matmul + activation + TwELL pack epilogue.
+
+The paper's Algorithm 1 adapted to TPU (DESIGN.md §2): the matmul output
+block lives in VMEM; the epilogue replaces the CUDA CTA-scoped atomic counter
+with a branch-free per-row *prefix sum over the lane axis* and a one-hot
+scatter, producing tile-locally packed values / global indices / counts in
+the same kernel — no second pass over dense data, no extra kernel launch.
+
+Grid: (M/bm, N/T, K/bk), K innermost (TPU sequential minor axis) with a VMEM
+f32 scratch accumulator; the epilogue fires on the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _act(name: str, x):
+    if name == "relu":
+        return jnp.maximum(x, 0)
+    if name == "relu2":
+        return jnp.square(jnp.maximum(x, 0))
+    raise ValueError(name)
+
+
+def _kernel(x_ref, w_ref, vals_ref, idx_ref, nnz_ref, acc_ref, *,
+            tile: int, tc: int, act: str):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+    j = pl.program_id(1)        # read outside pl.when (interpret-mode req.)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        h = _act(act, acc_ref[...])                       # (bm, T) f32
+        mask = h > 0
+        pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1      # (bm, T)
+        slots = jax.lax.broadcasted_iota(jnp.int32, (1, 1, tc), 2)
+        hit = (pos[:, :, None] == slots) & mask[:, :, None]       # (bm, T, tc)
+        vals = jnp.sum(jnp.where(hit, h[:, :, None], 0.0), axis=1)
+        cols = jax.lax.broadcasted_iota(jnp.int32, h.shape + (1,), 1)
+        gidx = jnp.sum(jnp.where(hit, cols + j * tile, 0), axis=1)
+        nnz_ref[...] = jnp.sum(mask.astype(jnp.int32), axis=1,
+                               keepdims=True)
+        vals_ref[...] = vals.astype(vals_ref.dtype)
+        idx_ref[...] = gidx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "compression", "act",
+                                             "bm", "bk", "interpret"))
+def twell_gate_matmul_pallas(x, w, tile: int = 256, compression: int = 8,
+                             act: str = "relu", bm: int = 128, bk: int = 512,
+                             interpret: bool = True):
+    """x: (M, K), w: (K, N) -> (values (M, N/C), indices, nnz (M, N/T)).
+
+    Note: counts are exact even when a tile overflows its T/C slots; values
+    beyond the slot budget are dropped per the paper's overflow contract
+    (App. B.2.1) — the caller compares nnz against T/C to raise the flag.
+    """
+    m, kdim = x.shape
+    _, n = w.shape
+    assert n % tile == 0 and tile % compression == 0
+    bm = min(bm, m)
+    bk = min(bk, kdim)
+    assert m % bm == 0 and kdim % bk == 0
+    tc = tile // compression
+    nt = n // tile
+    grid = (m // bm, nt, kdim // bk)
+    kern = functools.partial(_kernel, tile=tile, tc=tc, act=act)
+    vals, idx, nnz = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, tile), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, tc), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, tc), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, nt * tc), x.dtype),
+            jax.ShapeDtypeStruct((m, nt * tc), jnp.int32),
+            jax.ShapeDtypeStruct((m, nt), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, tile), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return vals, idx, nnz

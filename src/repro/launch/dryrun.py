@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Set only here — smoke tests and benches see the real single device.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.config import TrainConfig, shape_by_name, LM_SHAPES  # noqa: E402
+from repro.configs import ALL_ARCHS, get_config                 # noqa: E402
+from repro.distributed.sharding import (batch_spec, dp_spec,    # noqa: E402
+                                        make_cache_specs,
+                                        make_param_specs, named)
+from repro.launch import hlo_analysis, specs                    # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro import training                                      # noqa: E402
+from repro.optim.adamw import AdamWState                        # noqa: E402
+
+# long_500k requires sub-quadratic attention: run for SSM/hybrid/linear-attn
+# and windowed/chunked archs; skip for pure full-attention archs (DESIGN.md §4)
+LONG_OK = {"mixtral-8x22b", "llama4-scout-17b-a16e", "zamba2-1.2b", "rwkv6-7b"}
+
+
+def cell_list():
+    cells = []
+    for arch in ALL_ARCHS:
+        for sh in LM_SHAPES:
+            if sh.name == "long_500k" and arch not in LONG_OK:
+                continue
+            cells.append((arch, sh.name))
+    return cells
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             ffn_impl: str = None, remat: str = None, microbatch: int = 0,
+             grad_accum_dtype: str = "float32",
+             overrides: dict = None,
+             dump_hlo: str = None) -> dict:
+    cfg = get_config(arch)
+    if ffn_impl:
+        cfg = dataclasses.replace(
+            cfg, sparsity=dataclasses.replace(cfg.sparsity, ffn_impl=ffn_impl))
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if overrides:
+        typed = {}
+        for k, v in overrides.items():
+            cur = getattr(cfg, k)
+            typed[k] = type(cur)(v) if cur is not None else v
+        cfg = dataclasses.replace(cfg, **typed)
+    shape = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "axes": list(mesh.axis_names), "kind": shape.kind,
+           "ffn_impl": cfg.sparsity.ffn_impl, "remat": cfg.remat,
+           "n_devices": mesh.devices.size}
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        pshapes = specs.abstract_params(cfg)
+        rec["param_count"] = int(sum(x.size for x in jax.tree.leaves(pshapes)))
+        pspecs = make_param_specs(pshapes, cfg, mesh)
+        psh = named(mesh, pspecs)
+        inp = specs.input_specs(cfg, shape)
+
+        if shape.kind == "train":
+            oshapes = specs.abstract_opt_state(pshapes, cfg)
+            ospecs = AdamWState(P(), pspecs, pspecs)
+            osh = named(mesh, ospecs)
+            bshard = jax.tree.map(
+                lambda s: named(mesh, batch_spec(len(s.shape), mesh, s.shape[0])),
+                inp["batch"])
+            tcfg = TrainConfig(microbatch=microbatch,
+                               grad_accum_dtype=grad_accum_dtype)
+            step = training.make_train_step(cfg, tcfg)
+            jitted = jax.jit(step, in_shardings=(psh, osh, bshard),
+                             out_shardings=(psh, osh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(pshapes, oshapes, inp["batch"])
+        elif shape.kind == "prefill":
+            bshard = jax.tree.map(
+                lambda s: named(mesh, batch_spec(len(s.shape), mesh, s.shape[0])),
+                inp["batch"])
+            step = training.make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(psh, bshard))
+            lowered = jitted.lower(pshapes, inp["batch"])
+        else:  # decode
+            cspecs = make_cache_specs(inp["cache"], cfg, mesh)
+            csh = named(mesh, cspecs)
+            tsh = named(mesh, batch_spec(2, mesh, shape.global_batch))
+            step = training.make_serve_step(cfg)
+            jitted = jax.jit(step, in_shardings=(psh, csh, tsh),
+                             out_shardings=(None, csh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(pshapes, inp["cache"], inp["tokens"])
+        rec["lower_s"] = round(time.time() - t0, 2)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        ma = compiled.memory_analysis()
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+            rec[field] = int(getattr(ma, field, -1))
+        rec["peak_bytes_per_device"] = (
+            rec["argument_size_in_bytes"] + rec["output_size_in_bytes"] +
+            rec["temp_size_in_bytes"] - max(rec["alias_size_in_bytes"], 0))
+        ca = compiled.cost_analysis() or {}
+        rec["xla_flops_per_device_raw"] = float(ca.get("flops", -1))
+        rec["xla_bytes_accessed_raw"] = float(ca.get("bytes accessed", -1))
+
+        hlo = compiled.as_text()
+        rec["hlo_chars"] = len(hlo)
+        if dump_hlo:
+            with open(dump_hlo, "w") as f:
+                f.write(hlo)
+        ana = hlo_analysis.analyze(hlo)
+        rec["dot_flops_per_device"] = ana["dot_flops_corrected"]
+        rec["collective_bytes_per_device"] = ana["collective_bytes"]
+        rec["hbm_bytes_per_device"] = ana["hbm_bytes_estimate"]
+        rec["hbm_bytes_strict"] = ana["hbm_bytes_strict"]
+        rec["microbatch"] = microbatch
+        rec["total_s"] = round(time.time() - t0, 2)
+
+        # the dry-run contract: these two must print
+        print(ma)
+        print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ffn-impl", default=None,
+                    help="override sparsity.ffn_impl (dense|hybrid|...)")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--grad-accum-dtype", default="float32")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ModelConfig field override, e.g. rwkv_chunk=64")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--dump-hlo", default=None)
+    args = ap.parse_args()
+
+    try:
+        rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                       ffn_impl=args.ffn_impl, remat=args.remat,
+                       microbatch=args.microbatch,
+                       grad_accum_dtype=args.grad_accum_dtype,
+                       overrides=dict(o.split("=", 1) for o in args.override),
+                       dump_hlo=args.dump_hlo)
+        rec["status"] = "ok"
+    except Exception as e:  # record failures as data, not crashes
+        rec = {"arch": args.arch, "shape": args.shape,
+               "multi_pod": args.multi_pod, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    print(json.dumps({k: v for k, v in rec.items() if k != "traceback"},
+                     indent=1))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+    if rec["status"] != "ok":
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

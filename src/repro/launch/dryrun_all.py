@@ -1,0 +1,97 @@
+"""Run every (arch x shape x mesh) dry-run cell as a subprocess; collect JSONs.
+
+Per-cell knobs (documented in EXPERIMENTS.md §Dry-run):
+- train cells run with 2-level (sqrt) remat and gradient-accumulation
+  microbatching sized so a microbatch shards over the DP axes
+  (16 single-pod, 32 multi-pod);
+- the largest archs accumulate gradients in bf16 (grad_accum_dtype).
+
+Usage: PYTHONPATH=src python -m repro.launch.dryrun_all [--only arch] [--mesh single|multi|both]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+BF16_ACCUM = {"mixtral-8x22b", "llama3-405b", "deepseek-67b",
+              "llama4-scout-17b-a16e"}
+# §Perf: larger microbatches amortize FSDP gathers where activations fit
+# (llama4 fits mb32 only with the head-padding variant — default stays 16)
+MB32_SINGLE = {"deepseek-67b"}
+
+
+def cell_cmd(arch, shape, multi_pod, out):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if shape == "train_4k":
+        mb = "32" if (multi_pod or arch in MB32_SINGLE) else "16"
+        cmd += ["--remat", "2level", "--microbatch", mb]
+        if arch in BF16_ACCUM:
+            cmd += ["--grad-accum-dtype", "bfloat16"]
+    return cmd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--timeout", type=int, default=1200)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import cell_list  # safe: no jax device init here
+    os.makedirs(RESULTS, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = [(a, s) for a, s in cell_list() if not args.only or a == args.only]
+    t00 = time.time()
+    n_ok = n_fail = n_skip = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            out = os.path.join(RESULTS, tag + ".json")
+            if os.path.exists(out) and not args.force:
+                try:
+                    if json.load(open(out)).get("status") == "ok":
+                        n_skip += 1
+                        continue
+                except Exception:
+                    pass
+            t0 = time.time()
+            env = dict(os.environ)
+            env.pop("XLA_FLAGS", None)
+            r = subprocess.run(cell_cmd(arch, shape, mp, out),
+                               capture_output=True, text=True,
+                               timeout=args.timeout, env=env)
+            dt = time.time() - t0
+            status = "?"
+            if os.path.exists(out):
+                try:
+                    status = json.load(open(out)).get("status")
+                except Exception:
+                    status = "badjson"
+            if r.returncode != 0 and status != "ok":
+                n_fail += 1
+                if not os.path.exists(out):
+                    with open(out, "w") as f:
+                        json.dump({"arch": arch, "shape": shape,
+                                   "multi_pod": mp, "status": "crash",
+                                   "stderr": r.stderr[-3000:]}, f, indent=1)
+                status = "CRASH/ERR"
+            else:
+                n_ok += 1
+            print(f"[{time.time()-t00:7.1f}s] {tag:55s} {status:10s} {dt:6.1f}s",
+                  flush=True)
+    print(f"done: ok={n_ok} fail={n_fail} skipped={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never touches
+jax device state. Single pod = (data=16, model=16) = 256 chips (v5e pod);
+multi-pod adds an outer pure-DP ``pod`` axis (2 pods = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    if multi_pod:
+        shape, axes = (2, 16, 16), ("pod", "data", "model")
+    else:
+        shape, axes = (16, 16), ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — the dry-run entrypoint "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape),
+                         devices=devices)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small host-device mesh for integration tests."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape),
+                         devices=jax.devices()[:n])

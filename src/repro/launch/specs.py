@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation (the dry-run contract)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import lm
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                with_labels: bool = True) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    out = {"tokens": _sds((b, s), jnp.int32)}
+    if with_labels:
+        out["labels"] = _sds((b, s), jnp.int32)
+    if cfg.family == "audio":
+        out["frames"] = _sds((b, s, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        out["patches"] = _sds((b, cfg.num_image_tokens, cfg.d_model), dt)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Abstract KV/SSM cache for decode cells (eval_shape — no allocation)."""
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len,
+                              enc_len=shape.seq_len,
+                              num_patches=cfg.num_image_tokens))
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    return _sds((shape.global_batch, 1), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """The full abstract input set for the cell's step function."""
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_labels=False)}
+    if shape.kind == "decode":
+        return {"cache": cache_specs(cfg, shape),
+                "tokens": decode_token_specs(cfg, shape)}
+    raise ValueError(shape.kind)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: lm.init(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(params_shapes, cfg: ModelConfig):
+    from repro.optim import adamw
+    return jax.eval_shape(
+        functools.partial(adamw.init, dtype=jnp.dtype(cfg.opt_state_dtype)),
+        params_shapes)

@@ -1,0 +1,354 @@
+"""Model primitives: norms, RoPE, attention variants, embeddings.
+
+Pure functional modules: ``*_init(key, ...) -> params`` and stateless apply
+functions. All attention variants share one entry point so every architecture
+family (full-causal / SWA / chunked-local / cross / decode) uses the same
+code path, and so the dry-run lowers a single, auditable attention HLO.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INIT_STD = 0.02
+
+
+def _norm_f32(fn):
+    @functools.wraps(fn)
+    def wrapped(x, *a, **k):
+        return fn(x.astype(jnp.float32), *a, **k).astype(x.dtype)
+    return wrapped
+
+
+@_norm_f32
+def rmsnorm(x, scale=None, eps: float = 1e-6):
+    y = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return y if scale is None else y * scale.astype(jnp.float32)
+
+
+@_norm_f32
+def layernorm(x, scale=None, bias=None, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y
+
+
+def norm_init(kind: str, d: int, dtype) -> Dict[str, jax.Array]:
+    if kind == "nonparametric_ln":           # olmo: no learned affine
+        return {}
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def norm_apply(kind: str, params: Dict, x: jax.Array) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    if kind == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    if kind == "nonparametric_ln":
+        return layernorm(x)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, hd/2)
+    ang = ang[..., None, :]                                         # head axis
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = xf1 * cos - xf2 * sin
+    o2 = xf2 * cos + xf1 * sin
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              dtype) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 4)
+    r = lambda k, s: (INIT_STD * jax.random.normal(k, s)).astype(dtype)
+    return {
+        "wq": r(ks[0], (d_model, n_heads * head_dim)),
+        "wk": r(ks[1], (d_model, n_kv * head_dim)),
+        "wv": r(ks[2], (d_model, n_kv * head_dim)),
+        "wo": r(ks[3], (n_heads * head_dim, d_model)),
+    }
+
+
+def repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, Hkv, hd) -> (B, S, H, hd) by group broadcast."""
+    b, s, hkv, hd = k.shape
+    if hkv == n_heads:
+        return k
+    return jnp.broadcast_to(k[:, :, :, None, :],
+                            (b, s, hkv, n_heads // hkv, hd)).reshape(b, s, n_heads, hd)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """Plain masked attention on (B, Sq, H, hd) x (B, Sk, H, hd)."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _chunked_causal(q, k, v, scale, q_chunk: int, kv_chunk: int):
+    """Flash-style online-softmax causal attention, O(q_chunk*kv_chunk) memory.
+
+    Query chunks are scanned; for each, KV chunks are scanned with a causal
+    mask. Chunk-pairs strictly in the future contribute nothing but are still
+    computed (masked) — the FLOP waste is removed by the banded variants below
+    and by the Pallas flash kernel on TPU (kernels/flash_attention.py).
+    """
+    b, s, h, hd = q.shape
+    nq, nk = s // q_chunk, s // kv_chunk
+    qc = q.reshape(b, nq, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, nk, kv_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, kv_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_q):
+        qi, qq = qi_q
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kk, vv = ki_kv
+            logit = jnp.einsum("bqhd,bkhd->bhqk", qq, kk).astype(jnp.float32) * scale
+            qpos = qi * q_chunk + jnp.arange(q_chunk)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            logit = jnp.where(mask[None, None], logit, -1e30)
+            m_new = jnp.maximum(m, logit.max(-1))
+            p = jnp.exp(logit - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qq.dtype), vv).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32),
+                jnp.zeros((b, h, q_chunk), jnp.float32),
+                jnp.zeros((b, h, q_chunk, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kc, vc))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return None, out.transpose(0, 2, 1, 3)                   # (b, qc, h, hd)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def _banded(q, k, v, scale, band_chunk: int, lookback: int,
+            window: int = 0):
+    """Exact banded causal attention: query chunk i attends KV chunks
+    [i-lookback, i]. lookback=0 => chunked-local (llama4); lookback=1 with
+    band_chunk=W and a window mask => sliding-window (mixtral).
+    FLOPs O(S * (lookback+1)*C) — sub-quadratic.
+    """
+    b, s, h, hd = q.shape
+    c = band_chunk
+    nq = s // c
+    qc = q.reshape(b, nq, c, h, hd)
+    pad = lookback * c
+    kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    span = (lookback + 1) * c
+    # each query chunk's KV band: chunks [i-lookback, i] of the padded seq
+    nb = kp.shape[1] // c
+    kb = kp.reshape(b, nb, c, h, hd)
+    idx = jnp.arange(nq)[:, None] + jnp.arange(lookback + 1)[None, :]
+    kb = kb[:, idx].reshape(b, nq, span, h, hd)
+    vb = vp.reshape(b, nb, c, h, hd)[:, idx].reshape(b, nq, span, h, hd)
+    qpos = (jnp.arange(nq) * c)[:, None] + jnp.arange(c)[None, :]          # global q pos
+    kpos = (jnp.arange(nq) * c)[:, None] + jnp.arange(span)[None, :] - pad  # global k pos
+    logits = jnp.einsum("bnqhd,bnkhd->bnhqk", qc, kb).astype(jnp.float32) * scale
+    mask = (qpos[:, :, None] >= kpos[:, None, :]) & (kpos[:, None, :] >= 0)
+    if window:
+        mask = mask & (qpos[:, :, None] - kpos[:, None, :] < window)
+    logits = jnp.where(mask[:, None][None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", probs, vb)
+    return out.reshape(b, s, h, hd)
+
+
+def attention(params: Dict, x: jax.Array, cfg, *, positions: jax.Array,
+              kind: str = "causal", kv_x: Optional[jax.Array] = None,
+              cache: Optional[Dict] = None,
+              q_chunk: int = 1024, kv_chunk: int = 1024
+              ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Unified attention.
+
+    kind: causal | swa | local_chunk | cross | bidir
+    cache: decode mode — {"k","v","pos"}; x is (B, 1, D). Returns updated cache.
+    """
+    b, s, d = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    scale = 1.0 / (hd ** 0.5)
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    if cache is not None and kind == "cross" and "xk" in cache:
+        k = v = None                       # cross K/V live in the cache
+    else:
+        src = x if kv_x is None else kv_x
+        sk = src.shape[1]
+        k = (src @ params["wk"]).reshape(b, sk, hkv, hd)
+        v = (src @ params["wv"]).reshape(b, sk, hkv, hd)
+    if kind != "cross":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    # band degeneration: when the window / local chunk covers the whole
+    # sequence, SWA and chunked-local ARE full causal attention — route to
+    # the optimized causal paths (avoids the padded lookback chunk: -45%
+    # banded logits bytes at S == window, §Perf extra)
+    if cache is None:
+        if kind == "swa" and cfg.window >= s:
+            kind = "causal"
+        if kind == "local_chunk" and cfg.attn_chunk >= s:
+            kind = "causal"
+
+    new_cache = None
+    if cache is not None and kind != "cross":
+        # decode: append to (ring) cache. cache["k"]: (B, S_cache, Hkv, hd)
+        pos = cache["pos"]                                        # scalar int
+        s_cache = cache["k"].shape[1]
+        slot = pos % s_cache if kind == "swa" else pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+        kf = repeat_kv(ck, h)
+        vf = repeat_kv(cv, h)
+        kpos = jnp.arange(s_cache)
+        if kind == "swa":
+            valid = (kpos < pos + 1) & (kpos > pos - s_cache)     # ring validity
+            # ring buffer stores absolute positions implicitly; mask invalid
+            mask = valid[None, None, None, :]
+        else:
+            mask = (kpos <= pos)[None, None, None, :]
+        out = _sdpa(q, kf, vf, mask, scale)
+    elif kind == "cross":
+        if cache is not None and "xk" in cache:
+            # decode: cross K/V precomputed once into the cache
+            out = _sdpa(q, repeat_kv(cache["xk"], h), repeat_kv(cache["xv"], h),
+                        None, scale)
+            new_cache = cache
+        else:
+            out = _sdpa(q, repeat_kv(k, h), repeat_kv(v, h), None, scale)
+    elif kind == "bidir":
+        out = _chunked_bidir(q, repeat_kv(k, h), repeat_kv(v, h), scale,
+                             q_chunk, kv_chunk) if s > 2048 else \
+            _sdpa(q, repeat_kv(k, h), repeat_kv(v, h), None, scale)
+    elif kind == "local_chunk":
+        out = _banded(q, repeat_kv(k, h), repeat_kv(v, h), scale,
+                      band_chunk=min(cfg.attn_chunk, s), lookback=0)
+    elif kind == "swa":
+        w = min(cfg.window, s)
+        out = _banded(q, repeat_kv(k, h), repeat_kv(v, h), scale,
+                      band_chunk=w, lookback=1, window=w)
+    else:  # full causal
+        # <=2k: one masked SDPA. 2k-4k: unrolled exact-causal (query chunks
+        # against growing KV prefixes — no masked-FLOP waste, ~40% fewer
+        # logits bytes than chunked scans; §Perf C iters 1+3). >4k: the
+        # O(S^2) buffers force the online-softmax chunked path (the Pallas
+        # flash kernel replaces it on real TPU).
+        if s > 4096:
+            out = _chunked_causal(q, repeat_kv(k, h), repeat_kv(v, h), scale,
+                                  min(q_chunk, s), min(kv_chunk, s))
+        elif s > 2048:
+            out = _causal_unrolled(q, repeat_kv(k, h), repeat_kv(v, h),
+                                   scale, min(q_chunk, s))
+        else:
+            qpos = jnp.arange(s)
+            mask = (qpos[:, None] >= qpos[None, :])[None, None]
+            out = _sdpa(q, repeat_kv(k, h), repeat_kv(v, h), mask, scale)
+    y = out.reshape(b, s, h * hd) @ params["wo"]
+    return y, new_cache
+
+
+def _causal_unrolled(q, k, v, scale, q_chunk: int):
+    """Exact causal attention as a python-unrolled loop over query chunks,
+    each attending its *static-length* KV prefix — causal-optimal FLOPs
+    (no masked future work except the diagonal chunk's triangle)."""
+    b, s, h, hd = q.shape
+    nq = s // q_chunk
+    outs = []
+    for i in range(nq):
+        qi = q[:, i * q_chunk:(i + 1) * q_chunk]
+        klen = (i + 1) * q_chunk
+        ki, vi = k[:, :klen], v[:, :klen]
+        qpos = i * q_chunk + jnp.arange(q_chunk)
+        mask = (qpos[:, None] >= jnp.arange(klen)[None, :])[None, None]
+        outs.append(_sdpa(qi, ki, vi, mask, scale))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _chunked_bidir(q, k, v, scale, q_chunk, kv_chunk):
+    """Non-causal chunked attention (whisper encoder at 32k frames)."""
+    b, s, hq, hd = q.shape
+    nq = s // q_chunk
+    qc = q.reshape(b, nq, q_chunk, hq, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qq):
+        sk = k.shape[1]
+        nk = sk // kv_chunk
+        kc = k.reshape(b, nk, kv_chunk, hq, hd).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(b, nk, kv_chunk, hq, hd).transpose(1, 0, 2, 3, 4)
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            kk, vv = kv
+            logit = jnp.einsum("bqhd,bkhd->bhqk", qq, kk).astype(jnp.float32) * scale
+            m_new = jnp.maximum(m, logit.max(-1))
+            p = jnp.exp(logit - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qq.dtype), vv).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, hq, q_chunk), -jnp.inf, jnp.float32),
+                jnp.zeros((b, hq, q_chunk), jnp.float32),
+                jnp.zeros((b, hq, q_chunk, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (kc, vc))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return None, out.transpose(0, 2, 1, 3)
+
+    _, outs = jax.lax.scan(q_step, None, qc)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, hq, hd)
+
+
+# --------------------------------------------------------------------------- #
+# embeddings
+# --------------------------------------------------------------------------- #
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (INIT_STD * jax.random.normal(key, (vocab, d_model))).astype(dtype)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_logits(x: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.einsum("bsd,vd->bsv", x, table)

@@ -1,0 +1,242 @@
+"""Mixture-of-Experts block with the paper's SparseFFN inside each expert.
+
+Two dispatch implementations:
+
+- ``onehot``  exact, drop-free reference (every expert sees every token,
+              masked by combine weights). O(E) compute — used for smoke tests
+              and as the correctness oracle for the production path.
+- ``sorted``  production path: per-data-shard sort-based dispatch into a
+              static-capacity ``(E, C, D)`` buffer under a *partial-manual*
+              ``jax.shard_map`` (manual over the data/pod axes, auto over the
+              model axis) so expert compute stays TP/EP-sharded while the
+              dispatch sort stays shard-local. Matches MaxText-style dropping
+              MoE semantics (capacity_factor bounds the FLOPs).
+
+The technique composes: each expert's FFN is ``repro.core.sparse_ffn`` with
+L1-induced activation sparsity; aux stats aggregate over experts.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_ffn
+from repro.models.layers import INIT_STD
+
+
+def moe_init(key, d_model: int, d_ff: int, num_experts: int, gated: bool,
+             dtype) -> Dict:
+    kr, ke = jax.random.split(key)
+    expert_keys = jax.random.split(ke, num_experts)
+    experts = jax.vmap(
+        lambda k: sparse_ffn.init(k, d_model, d_ff, gated, dtype))(expert_keys)
+    router = (INIT_STD * jax.random.normal(kr, (d_model, num_experts))).astype(dtype)
+    return {"router": router, "experts": experts}
+
+
+def _balance_loss(probs: jax.Array, combine_mask: jax.Array) -> jax.Array:
+    """Switch/Mixtral load-balancing loss: E * sum_e f_e * P_e."""
+    e = probs.shape[-1]
+    frac = combine_mask.astype(jnp.float32).mean(axis=0)        # tokens per expert
+    prob = probs.mean(axis=0)
+    return e * jnp.sum(frac * prob)
+
+
+def _expert_ffn(expert_params, xe, scfg, gated):
+    """Apply SparseFFN per expert over an (E, C, D) buffer."""
+    def one(p, x):
+        return sparse_ffn.apply(p, x, scfg, gated)
+    return jax.vmap(one)(expert_params, xe)
+
+
+def _reduce_aux(aux_e: Dict, extra: Dict) -> Dict:
+    out = {
+        "l1": aux_e["l1"].mean(),
+        "nnz_mean": aux_e["nnz_mean"].mean(),
+        "nnz_max": aux_e["nnz_max"].max(),
+        "neuron_active": jnp.any(aux_e["neuron_active"], axis=0),
+    }
+    out.update(extra)
+    return out
+
+
+def moe_apply_onehot(params: Dict, x: jax.Array, cfg, scfg,
+                     gated: bool) -> Tuple[jax.Array, Dict]:
+    """Exact drop-free dispatch: compute all experts, combine with router
+    weights. x: (B, S, D)."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    probs = jax.nn.softmax((xt @ params["router"]).astype(jnp.float32), -1)
+    top_vals, top_ids = jax.lax.top_k(probs, cfg.top_k)
+    top_vals = top_vals / top_vals.sum(-1, keepdims=True)
+    combine = jnp.zeros_like(probs).at[
+        jnp.arange(xt.shape[0])[:, None], top_ids].set(top_vals)   # (T, E)
+
+    xe = jnp.broadcast_to(xt[None], (cfg.num_experts, *xt.shape))
+    ye, aux_e = _expert_ffn(params["experts"], xe, scfg, gated)    # (E, T, D)
+    y = jnp.einsum("etd,te->td", ye.astype(jnp.float32),
+                   combine).astype(x.dtype)
+    aux = _reduce_aux(aux_e, {"moe_balance": _balance_loss(probs, combine > 0)})
+    return y.reshape(b, s, d), aux
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _fsdp_gather_bf16(wl, axes, dim, dtype_name):
+    """FSDP weight gather with an f32 reduce-scatter transpose.
+
+    Forward: bf16 all-gather of the data-sharded weight dim (half the bytes
+    of the f32 boundary). Backward: psum_scatter in f32 (avoids the XLA-CPU
+    AllReducePromotion crash on bf16 all-reduces), downcast to the primal
+    dtype. Beyond-paper §Perf A iteration 4."""
+    return jax.lax.all_gather(wl, axes, axis=dim, tiled=True)
+
+
+def _fsdp_gather_fwd(wl, axes, dim, dtype_name):
+    return _fsdp_gather_bf16(wl, axes, dim, dtype_name), None
+
+
+def _fsdp_gather_bwd(axes, dim, dtype_name, _res, g):
+    gf = jax.lax.psum_scatter(g.astype(jnp.float32), axes,
+                              scatter_dimension=dim, tiled=True)
+    return (gf.astype(jnp.dtype(dtype_name)),)
+
+
+_fsdp_gather_bf16.defvjp(_fsdp_gather_fwd, _fsdp_gather_bwd)
+
+
+def _expert_manual_specs(experts, cfg, mesh, dp_axes):
+    """Per-leaf manual (data-axes) PartitionSpec + the data-sharded dim,
+    mirroring the rule engine on per-layer shapes."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import param_spec
+    specs, gdims = {}, {}
+    for name, leaf in experts.items():
+        full = param_spec(f"experts/{name}", leaf.shape, cfg, mesh)
+        entries = list(full) + [None] * (leaf.ndim - len(list(full)))
+        manual = [a if a == "data" else None for a in entries]
+        specs[name] = P(*manual)
+        gdims[name] = manual.index("data") if "data" in manual else -1
+    return specs, gdims
+
+
+def moe_apply_sorted(params: Dict, x: jax.Array, cfg, scfg, gated: bool,
+                     mesh, dp_axes: Tuple[str, ...]) -> Tuple[jax.Array, Dict]:
+    """Production dispatch (see module docstring). x: (B, S, D)."""
+    from jax.sharding import PartitionSpec as P
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+
+    # Boundary strategy (EXPERIMENTS §Perf A, iteration 4 — REFUTED):
+    # explicit per-leaf bf16 gathers (_fsdp_gather_bf16) halve gather bytes
+    # but live inside the microbatch scan where XLA cannot hoist them ->
+    # measured 8x MORE collective traffic than the replicated f32 boundary,
+    # whose loop-invariant gather is hoisted out of the accumulation loop.
+    # Kept behind REPRO_MOE_MANUAL_GATHER=1 for no-accumulation regimes.
+    f32_boundary = jax.default_backend() == "cpu"
+    manual_gather = (os.environ.get("REPRO_MOE_MANUAL_GATHER") == "1"
+                     and "pod" not in dp_axes and "data" in dp_axes)
+    if manual_gather:
+        f32_boundary = False
+    compute_dt = jax.tree.leaves(params["experts"])[0].dtype
+    router_in, experts_in = params["router"], params["experts"]
+    if jax.default_backend() == "cpu":
+        router_in = router_in.astype(jnp.float32)
+    if f32_boundary:
+        experts_in = jax.tree.map(lambda a: a.astype(jnp.float32), experts_in)
+    if manual_gather:
+        expert_specs, gather_dims = _expert_manual_specs(
+            experts_in, cfg, mesh, dp_axes)
+    else:
+        expert_specs = jax.tree.map(lambda _: P(), experts_in)
+        gather_dims = None
+
+    def local(xl, router, experts):
+        router = router.astype(compute_dt)
+        if f32_boundary:
+            experts = jax.tree.map(lambda a: a.astype(compute_dt), experts)
+        if manual_gather:
+            experts = {
+                name: (_fsdp_gather_bf16(leaf, ("data",), gather_dims[name],
+                                         str(leaf.dtype))
+                       if gather_dims[name] >= 0 else leaf)
+                for name, leaf in experts.items()}
+        tl = xl.shape[0] * xl.shape[1]
+        xt = xl.reshape(tl, d)
+        cap = int(k * tl / e * cfg.capacity_factor + 0.5)
+        cap = max(8, (cap + 7) // 8 * 8)
+
+        probs = jax.nn.softmax((xt @ router).astype(jnp.float32), -1)
+        top_vals, top_ids = jax.lax.top_k(probs, k)               # (T, k)
+        top_vals = top_vals / top_vals.sum(-1, keepdims=True)
+
+        flat_ids = top_ids.reshape(-1)                            # (T*k,)
+        flat_tok = jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)
+        flat_w = top_vals.reshape(-1)
+        order = jnp.argsort(flat_ids, stable=True)
+        sid, stok, sw = flat_ids[order], flat_tok[order], flat_w[order]
+        counts = jnp.bincount(sid, length=e)                      # per-expert
+        offsets = jnp.cumsum(counts) - counts
+        pos = jnp.arange(tl * k, dtype=jnp.int32) - offsets[sid]
+        valid = pos < cap
+        slot = jnp.where(valid, sid * cap + pos, e * cap)         # OOB -> drop row
+
+        buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[slot].set(xt[stok])
+        buf = buf[:-1].reshape(e, cap, d)
+        ye, aux_e = _expert_ffn(experts, buf, scfg, gated)        # (E, C, D)
+        ye = ye.reshape(e * cap, d)
+        ye = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)])
+        contrib = ye[jnp.where(valid, slot, e * cap)] * \
+            (sw * valid)[:, None].astype(ye.dtype)
+        yt = jnp.zeros((tl, d), jnp.float32).at[stok].add(
+            contrib.astype(jnp.float32))
+
+        bal = _balance_loss(probs, jnp.zeros_like(probs).at[
+            jnp.arange(tl)[:, None], top_ids].set(1.0) > 0)
+        drop_frac = 1.0 - valid.mean()
+        # aggregate stats across data shards
+        aux = _reduce_aux(aux_e, {"moe_balance": bal,
+                                  "moe_drop_frac": drop_frac})
+        aux = {
+            "l1": jax.lax.pmean(aux["l1"], dp_axes),
+            "nnz_mean": jax.lax.pmean(aux["nnz_mean"], dp_axes),
+            "nnz_max": jax.lax.pmax(aux["nnz_max"], dp_axes),
+            "neuron_active": jax.lax.pmax(
+                aux["neuron_active"].astype(jnp.int32), dp_axes).astype(bool),
+            "moe_balance": jax.lax.pmean(aux["moe_balance"], dp_axes),
+            "moe_drop_frac": jax.lax.pmean(aux["moe_drop_frac"], dp_axes),
+        }
+        return yt.astype(xl.dtype).reshape(xl.shape), aux
+
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, None, None), P(None, None), expert_specs),
+        out_specs=(P(dp, None, None),
+                   {"l1": P(), "nnz_mean": P(), "nnz_max": P(),
+                    "neuron_active": P(), "moe_balance": P(),
+                    "moe_drop_frac": P()}),
+        axis_names=set(dp_axes), check_vma=False)
+    return fn(x, router_in, experts_in)
+
+
+def moe_apply(params, x, cfg, scfg, gated, mesh=None,
+              dp_axes: Tuple[str, ...] = ()) -> Tuple[jax.Array, Dict]:
+    if mesh is not None and dp_axes:
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        total = 1
+        for a in dp_axes:
+            total *= sizes.get(a, 1)
+        if x.shape[0] % total == 0:
+            return moe_apply_sorted(params, x, cfg, scfg, gated, mesh,
+                                    dp_axes)
+    # tiny / non-divisible batches (e.g. long_500k decode, smoke tests):
+    # exact drop-free dispatch
+    y, aux = moe_apply_onehot(params, x, cfg, scfg, gated)
+    aux["moe_drop_frac"] = jnp.float32(0)
+    return y, aux

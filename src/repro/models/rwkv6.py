@@ -1,0 +1,174 @@
+"""RWKV-6 (Finch) block: attention-free time-mix with data-dependent decay
+plus channel-mix FFN. [arXiv:2404.05892]
+
+The channel-mix uses squared-ReLU hidden activations — exactly the setting
+where the paper's L1 recipe + non-gated TwELL path apply (DESIGN.md §4); the
+channel-mix here routes through ``repro.core.sparse_ffn`` with
+``activation='relu2'``.
+
+The WKV recurrence runs as a chunked scan over time (O(S) compute, O(1)
+state) — 500k-token decode carries only the (H, hd, hd) state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import INIT_STD
+
+
+def rwkv_dims(cfg):
+    n_heads = cfg.d_model // cfg.rwkv_head_dim
+    return n_heads, cfg.rwkv_head_dim
+
+
+def timemix_init(key, cfg, dtype) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    r = lambda k, s: (INIT_STD * jax.random.normal(k, s)).astype(dtype)
+    lora = 64
+    return {
+        "mix": (0.5 * jnp.ones((5, d))).astype(dtype),   # lerp coeffs r,k,v,w,g
+        "wr": r(ks[0], (d, d)), "wk": r(ks[1], (d, d)), "wv": r(ks[2], (d, d)),
+        "wg": r(ks[3], (d, d)), "wo": r(ks[4], (d, d)),
+        "w0": jnp.full((d,), -6.0, jnp.float32),          # base decay (slow)
+        "wa": r(ks[5], (d, lora)), "wb": r(ks[6], (lora, d)),
+        "u": r(ks[7], (d,)).astype(jnp.float32),          # bonus ("first token")
+    }
+
+
+def _token_shift(x, prev=None):
+    """x_{t-1} feature mix; prev: (B, D) carried state for decode."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def timemix_apply(params, x: jax.Array, cfg, state=None
+                  ) -> Tuple[jax.Array, Dict]:
+    """x: (B, S, D). state: {"wkv": (B,H,hd,hd), "shift": (B,D)} or None."""
+    b, s, d = x.shape
+    h, hd = rwkv_dims(cfg)
+    prev = None if state is None else state["shift"]
+    xs = _token_shift(x, prev)
+    mix = params["mix"]
+    xr, xk, xv, xw, xg = [x + (xs - x) * mix[i] for i in range(5)]
+    r = (xr @ params["wr"]).reshape(b, s, h, hd)
+    k = (xk @ params["wk"]).reshape(b, s, h, hd)
+    v = (xv @ params["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ params["wg"])
+    # data-dependent decay (Finch): w_t = exp(-exp(w0 + tanh(x wa) wb))
+    dd = params["w0"] + (jnp.tanh(xw.astype(jnp.float32) @
+                                  params["wa"].astype(jnp.float32))
+                         @ params["wb"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dd)).reshape(b, s, h, hd)                # in (0,1)
+    u = params["u"].reshape(h, hd)
+
+    wkv0 = jnp.zeros((b, h, hd, hd), jnp.float32) if state is None \
+        else state["wkv"]
+    chunk = getattr(cfg, "rwkv_chunk", 0) or 0
+    if chunk and s % chunk == 0 and s > chunk:
+        wkv_final, outs_bsd = _wkv_chunked(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w.astype(jnp.float32), u, wkv0, chunk)
+        y = outs_bsd.reshape(b, s, d).astype(x.dtype)
+    else:
+        def step(wkv, inp):
+            rt, kt, vt, wt = inp                                  # (B,H,hd)
+            kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)              # (B,H,hd,hd)
+            out = jnp.einsum("bhk,bhkv->bhv", rt,
+                             wkv + u[None][..., None] * kv)
+            wkv = wkv * wt[..., None] + kv
+            return wkv, out
+
+        seq = (r.swapaxes(0, 1).astype(jnp.float32),
+               k.swapaxes(0, 1).astype(jnp.float32),
+               v.swapaxes(0, 1).astype(jnp.float32),
+               w.swapaxes(0, 1).astype(jnp.float32))
+        wkv_final, outs = jax.lax.scan(step, wkv0, seq)
+        y = outs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    # group-norm per head (rwkv uses GroupNorm; rms per head is equivalent here)
+    yh = y.reshape(b, s, h, hd).astype(jnp.float32)
+    yh = yh * jax.lax.rsqrt(jnp.mean(jnp.square(yh), -1, keepdims=True) + 1e-6)
+    y = yh.reshape(b, s, d).astype(x.dtype) * g
+    new_state = {"wkv": wkv_final, "shift": x[:, -1]}
+    return y @ params["wo"], new_state
+
+
+def _wkv_chunked(r, k, v, w, u, wkv0, chunk: int):
+    """Chunked WKV (beyond-paper perf, §Perf B): the per-channel-decay linear
+    attention factorizes within a chunk,
+
+      att[i, j] = sum_c r_i[c] e^{lc_{i-1}[c]} * k_j[c] e^{-lc_j[c]},  j < i
+
+    (lc = cumulative log decay), so a C-token chunk runs as dense matmuls +
+    one cross-chunk state update instead of C sequential steps. Replaces the
+    O(S)-step scan (whose per-step state round-trips dominated the memory
+    roofline term 500x) with O(S/C) steps of MXU-shaped work.
+
+    r,k,v,w: (B, S, H, hd) f32; returns (state (B,H,hd,hd), out (B,S,H*hd)).
+    """
+    b, s, h, hd = r.shape
+    nc = s // chunk
+
+    def to_c(t):
+        return t.reshape(b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+
+    # Factorization precomputed outside the chunk scan: measured better
+    # (22.2 TB vs 29.8 TB HBM est.) than recomputing decay factors per chunk
+    # from bf16 xs — the per-chunk f32 temps outweigh the larger xs
+    # (§Perf B, iteration 3, refuted hypothesis).
+    rc, kc, vc, wc = map(to_c, (r, k, v, w))           # (nc, B, H, C, hd)
+    lw = jnp.log(jnp.clip(wc, 1e-12, 1.0))             # log decay, <= 0
+    lc = jnp.cumsum(lw, axis=3)                        # (nc, B, H, C, hd)
+    lend = lc[:, :, :, -1:, :]
+    r_dec = rc * jnp.exp(jnp.clip(lc - lw, -30, 0))    # r_i e^{lc_{i-1}}
+    k_inv = kc * jnp.exp(jnp.clip(-lc, 0, 30))         # k_j e^{-lc_j}
+    k_end = kc * jnp.exp(jnp.clip(lend - lc, -30, 0))  # k_j e^{lc_last-lc_j}
+    dec_all = jnp.exp(jnp.clip(lend[:, :, :, 0, :], -30, 0))
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def chunk_step(state, inp):
+        rd, ki, ke, vc_, rc_, kc_, da = inp
+        att = jnp.einsum("bhid,bhjd->bhij", rd, ki)    # strict lower part
+        att = jnp.where(tri[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhij,bhjd->bhid", att, vc_)
+        # current-token bonus (u)
+        y_u = jnp.einsum("bhid,bhid->bhi", rc_, u[None, :, None, :] * kc_)
+        y_u = y_u[..., None] * vc_
+        # carried state contribution: r_i e^{lc_{i-1}} . S_in
+        y_state = jnp.einsum("bhid,bhdv->bhiv", rd, state)
+        # S_out = S_in * e^{lc_last} + sum_j (k_j e^{lc_last - lc_j}) v_j
+        state = state * da[..., None] + jnp.einsum(
+            "bhjd,bhjv->bhdv", ke, vc_)
+        return state, y_intra + y_u + y_state
+
+    state, outs = jax.lax.scan(
+        chunk_step, wkv0, (r_dec, k_inv, k_end, vc, rc, kc, dec_all))
+    # (nc, B, H, C, hd) -> (B, S, H*hd)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h * hd)
+    return state, out
+
+
+def channelmix_init(key, cfg, dtype) -> Dict:
+    from repro.core import sparse_ffn
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    p = sparse_ffn.init(k1, d, cfg.d_ff, gated=False, dtype=dtype)
+    p["mix"] = (0.5 * jnp.ones((1, d))).astype(dtype)
+    return p
+
+
+def channelmix_apply(params, x: jax.Array, cfg, scfg, state=None
+                     ) -> Tuple[jax.Array, Dict, Dict]:
+    """Channel-mix = token-shifted non-gated SparseFFN (relu^2)."""
+    from repro.core import sparse_ffn
+    prev = None if state is None else state["shift"]
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * params["mix"][0]
+    ffn_params = {"wu": params["wu"], "wd": params["wd"]}
+    y, aux = sparse_ffn.apply(ffn_params, xk, scfg, gated=False)
+    return y, {"shift": x[:, -1]}, aux

@@ -1,0 +1,75 @@
+"""AdamW + cosine schedule + global-norm clipping (paper App. B, Table 2).
+
+No optax in this container — implemented as pure pytree transforms. Moments
+may be stored in bf16 (``ModelConfig.opt_state_dtype``) which is required to
+fit the largest assigned archs on one 256-chip v5e pod (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () int32
+    m: Any                   # pytree like params
+    v: Any
+
+
+def init(params: Any, dtype=jnp.float32) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(z, params), jax.tree.map(z, params))
+
+
+def cosine_schedule(step: jax.Array, peak_lr: float, warmup: int,
+                    total: int, final_frac: float = 0.1) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / max(warmup, 1)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * \
+        (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def update(params: Any, grads: Any, state: AdamWState, *, lr: jax.Array,
+           beta1: float = 0.9, beta2: float = 0.95, eps: float = 1e-8,
+           weight_decay: float = 0.1) -> Tuple[Any, AdamWState]:
+    """Decoupled weight decay; update math in f32 regardless of state dtype."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1 - beta1 ** t
+    bc2 = 1 - beta2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = beta1 * m.astype(jnp.float32) + (1 - beta1) * gf
+        vf = beta2 * v.astype(jnp.float32) + (1 - beta2) * jnp.square(gf)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        step_v = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * step_v).astype(p.dtype),
+                mf.astype(m.dtype), vf.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda o: isinstance(o, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda o: isinstance(o, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda o: isinstance(o, tuple))
+    return new_params, AdamWState(step, new_m, new_v)

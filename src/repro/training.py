@@ -1,0 +1,79 @@
+"""Train/serve step builders: loss + grad + clip + AdamW (+ L1 schedule,
+microbatch gradient accumulation, optional gradient compression)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.core.sparsity import l1_schedule
+from repro.models import lm
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). The L1 coefficient follows the App. C.3 warm-up schedule when
+    configured; microbatching accumulates gradients (XLA overlaps the
+    FSDP collectives across microbatch steps)."""
+
+    def grads_of(params, batch, l1c):
+        (loss, (metrics, aux)), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True)(params, batch, cfg, l1c)
+        return grads, metrics, aux
+
+    def train_step(params, opt_state, batch):
+        step = opt_state.step
+        l1c = l1_schedule(step, cfg.sparsity.l1_coeff,
+                          cfg.sparsity.l1_constant_steps,
+                          cfg.sparsity.l1_warmup_steps)
+        if tcfg.microbatch and tcfg.microbatch < batch["tokens"].shape[0]:
+            nmb = batch["tokens"].shape[0] // tcfg.microbatch
+            mb = jax.tree.map(
+                lambda t: t.reshape(nmb, tcfg.microbatch, *t.shape[1:]), batch)
+
+            def acc(carry, mbatch):
+                g_acc, m_acc = carry
+                g, m, _ = grads_of(params, mbatch, l1c)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), None
+
+            acc_dt = jnp.dtype(tcfg.grad_accum_dtype)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            g1, m1, _ = grads_of(params, jax.tree.map(lambda t: t[0], mb), l1c)
+            m0 = jax.tree.map(lambda x: jnp.zeros_like(x), m1)
+            (grads, msum), _ = jax.lax.scan(acc, (g0, m0), mb)
+            grads = jax.tree.map(lambda g: (g / nmb).astype(jnp.float32), grads)
+            metrics = jax.tree.map(lambda m: m / nmb, msum)
+        else:
+            grads, metrics, _ = grads_of(params, batch, l1c)
+
+        grads, gnorm = adamw.clip_by_global_norm(grads, tcfg.max_grad_norm)
+        lr = adamw.cosine_schedule(step, tcfg.learning_rate,
+                                   tcfg.warmup_steps, tcfg.total_steps)
+        params, opt_state = adamw.update(
+            params, grads, opt_state, lr=lr, beta1=tcfg.beta1,
+            beta2=tcfg.beta2, eps=tcfg.eps, weight_decay=tcfg.weight_decay)
+        metrics = dict(metrics)
+        metrics.update(grad_norm=gnorm, lr=lr, l1_coeff=l1c)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens, cfg)
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _ = lm.forward(params, batch, cfg)
+        return logits
+    return prefill_step

@@ -1,0 +1,96 @@
+"""Hybrid format (Sec. 3.4): pack/unpack, matmuls, transpose, overflow
+contract — unit + hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from repro.core import hybrid as hyb
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+
+def _mixed_rows(key, m, n, sparse_nnz, dense_frac):
+    """Rows with tiny nnz + a few dense rows (the paper's observation)."""
+    h = jnp.zeros((m, n))
+    k1, k2, k3 = jax.random.split(key, 3)
+    cols = jax.random.randint(k1, (m, sparse_nnz), 0, n)
+    vals = jnp.abs(jax.random.normal(k2, (m, sparse_nnz))) + 0.1
+    h = jax.vmap(lambda row, c, v: row.at[c].set(v))(h, cols, vals)
+    dense_rows = jax.random.uniform(k3, (m,)) < dense_frac
+    hd = jnp.abs(jax.random.normal(k3, (m, n))) + 0.1
+    return jnp.where(dense_rows[:, None], hd, h)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.0, 0.4))
+def test_pack_unpack_roundtrip(seed, dense_frac):
+    m, n, ew = 16, 64, 8
+    h = _mixed_rows(jax.random.PRNGKey(seed), m, n, 4, dense_frac)
+    hy = hyb.pack(h, ew, num_dense_rows=m)      # enough backup: no overflow
+    assert not bool(hy.overflow)
+    np.testing.assert_allclose(hyb.unpack(hy), h, rtol=1e-6)
+    # routing invariant: a row is dense iff nnz > ELL_W
+    nnz = np.asarray((h != 0).sum(-1))
+    np.testing.assert_array_equal(np.asarray(hy.is_dense), nnz > ew)
+
+
+def test_overflow_contract():
+    """Backup exhaustion raises the flag (App. B.2.1): excess rows dropped,
+    flag set — the training system resizes + replays."""
+    h = jnp.ones((8, 32))                        # all rows dense
+    hy = hyb.pack(h, ell_width=4, num_dense_rows=2)
+    assert bool(hy.overflow)
+    assert int((hy.dense_map >= 0).sum()) == 2
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.0, 0.4))
+def test_hybrid_to_dense_matmul(seed, dense_frac):
+    m, n, k, ew = 12, 64, 24, 8
+    key = jax.random.PRNGKey(seed)
+    h = _mixed_rows(key, m, n, 5, dense_frac)
+    w = jax.random.normal(jax.random.fold_in(key, 9), (n, k)) * 0.1
+    hy = hyb.pack(h, ew, num_dense_rows=m)
+    np.testing.assert_allclose(hyb.hybrid_to_dense_matmul(hy, w), h @ w,
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_dense_to_hybrid_matmul(seed):
+    """Computes exactly the pattern entries of x @ w."""
+    m, n, k, ew = 12, 64, 24, 8
+    key = jax.random.PRNGKey(seed)
+    h = _mixed_rows(key, m, n, 5, 0.2)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (k, n)) * 0.1
+    pattern = hyb.pack(h, ew, num_dense_rows=m)
+    out = hyb.dense_to_hybrid_matmul(x, w, pattern)
+    full = np.asarray(x @ w)
+    mask = np.asarray(h != 0)
+    got = np.asarray(hyb.unpack(out))
+    np.testing.assert_allclose(got[mask], full[mask], rtol=2e-3, atol=2e-3)
+    assert (got[~mask] == 0).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_transpose(seed):
+    m, n, ew = 12, 48, 8
+    h = _mixed_rows(jax.random.PRNGKey(seed), m, n, 4, 0.15)
+    hy = hyb.pack(h, ew, num_dense_rows=m)
+    ht = hyb.transpose(hy, m, ell_width=m, num_dense_rows=n)
+    np.testing.assert_allclose(hyb.unpack(ht), np.asarray(h).T, rtol=1e-6)
+
+
+def test_memory_accounting():
+    """The packed representation is the Table-1 memory story: for 99% sparse
+    rows, hybrid storage << dense storage."""
+    m, n, ew = 256, 4096, 64
+    h = _mixed_rows(jax.random.PRNGKey(0), m, n, 16, 0.02)
+    hy = hyb.pack(h, ew, num_dense_rows=m // 8)
+    dense_bytes = h.size * h.dtype.itemsize
+    assert hyb.memory_bytes(hy) < 0.3 * dense_bytes

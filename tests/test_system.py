@@ -1,0 +1,95 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline claims, at CPU scale:
+1. the sparse training recipe (ReLU + L1) reaches comparable loss to the
+   unregularized baseline while activating far fewer neurons (Table 1 / Fig 3
+   direction);
+2. the TwELL inference path and the hybrid training path are numerically
+   faithful to the dense execution at the full-model level;
+3. the hybrid path's packed-activation training step is differentiable
+   end-to-end inside the full LM.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import TrainConfig
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models import lm
+from repro.optim import adamw
+from repro import training
+
+
+def _train(cfg, steps=30, batch=4, seq=64, seed=0, lr=1e-3):
+    key = jax.random.PRNGKey(seed)
+    params = lm.init(key, cfg)
+    opt = adamw.init(params)
+    data = SyntheticLM(cfg.vocab_size, batch, seq, seed=seed)
+    step = jax.jit(training.make_train_step(
+        cfg, TrainConfig(total_steps=steps, warmup_steps=5,
+                         learning_rate=lr)))
+    metrics = None
+    for _ in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, metrics = step(params, opt, b)
+    return params, {k: float(v) for k, v in metrics.items()}
+
+
+def test_sparse_vs_dense_quality_and_sparsity():
+    base = get_config("paper-0.5b").reduced(d_model=96, d_ff=256,
+                                            num_layers=2)
+    dense_cfg = dataclasses.replace(
+        base, sparsity=dataclasses.replace(base.sparsity, l1_coeff=0.0))
+    sparse_cfg = dataclasses.replace(
+        base, sparsity=dataclasses.replace(base.sparsity, l1_coeff=3.0))
+    # NOTE on scale: the paper reaches 99% sparsity at l1=2e-5 over 30k steps
+    # of 1M tokens; at CPU-test scale (200 steps x 256 tokens) the same
+    # mechanism needs a proportionally larger coefficient to be measurable.
+    _, m_dense = _train(dense_cfg, steps=200, lr=3e-3)
+    _, m_sparse = _train(sparse_cfg, steps=200, lr=3e-3)
+    # quality: CE within 5% at this budget
+    assert m_sparse["ce"] < m_dense["ce"] * 1.05, (m_sparse, m_dense)
+    # sparsity: clearly fewer active neurons (>35% reduction)
+    assert m_sparse["nnz_mean"] < 0.65 * m_dense["nnz_mean"]
+
+
+def test_full_model_impl_equivalence():
+    """dense / tile_skip / hybrid / gather forward logits agree on a trained
+    (sparsified) model."""
+    base = get_config("paper-0.5b").reduced(d_model=64, d_ff=128,
+                                            num_layers=2)
+    cfg = dataclasses.replace(
+        base, sparsity=dataclasses.replace(base.sparsity, l1_coeff=2e-2))
+    params, _ = _train(cfg, steps=20)
+    batch = next(SyntheticLM(cfg.vocab_size, 2, 32, seed=9))
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    outs = {}
+    for impl in ["dense", "tile_skip", "hybrid", "gather"]:
+        ci = dataclasses.replace(cfg, sparsity=dataclasses.replace(
+            cfg.sparsity, ffn_impl=impl,
+            twell_c=1 if impl == "gather" else cfg.sparsity.twell_c,
+            ell_width=cfg.d_ff, dense_backup_frac=1.0))
+        outs[impl], _ = jax.jit(lambda p, b, c=ci: lm.forward(p, b, c))(
+            params, batch)
+    for impl in ["tile_skip", "hybrid", "gather"]:
+        np.testing.assert_allclose(
+            np.asarray(outs[impl], np.float32),
+            np.asarray(outs["dense"], np.float32), rtol=2e-3, atol=2e-3,
+            err_msg=impl)
+
+
+def test_hybrid_training_full_model():
+    """Train with ffn_impl='hybrid' (packed-activation custom_vjp inside the
+    full LM) — loss decreases and matches dense-impl training closely."""
+    base = get_config("paper-0.5b").reduced(d_model=64, d_ff=128,
+                                            num_layers=2)
+    mk = lambda impl: dataclasses.replace(base, sparsity=dataclasses.replace(
+        base.sparsity, l1_coeff=1e-3, ffn_impl=impl, ell_width=base.d_ff,
+        dense_backup_frac=1.0))
+    _, m_dense = _train(mk("dense"), steps=25)
+    _, m_hyb = _train(mk("hybrid"), steps=25)
+    np.testing.assert_allclose(m_hyb["ce"], m_dense["ce"], rtol=2e-2)
+    assert m_hyb["ce"] < 5.2

@@ -1,0 +1,84 @@
+"""TwELL format semantics: pack/unpack roundtrip + invariants (hypothesis)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import twell
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+
+def _rand_sparse(key, m, n, density):
+    h = jax.random.normal(key, (m, n))
+    mask = jax.random.uniform(jax.random.fold_in(key, 1), (m, n)) < density
+    return jnp.where(mask, jnp.abs(h) + 0.1, 0.0)
+
+
+@pytest.mark.parametrize("m,n,tile,c", [
+    (8, 64, 32, 4), (16, 128, 64, 8), (4, 256, 256, 8), (32, 512, 128, 2),
+])
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.2])
+def test_pack_unpack_roundtrip(m, n, tile, c, density):
+    h = _rand_sparse(jax.random.PRNGKey(m * n + int(density * 10)),
+                     m, n, density)
+    tw = twell.pack(h, tile, c)
+    if not bool(tw.overflow):
+        np.testing.assert_allclose(twell.unpack(tw), h, rtol=1e-6)
+
+
+@given(st.integers(1, 12), st.integers(1, 4), st.floats(0.0, 1.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_pack_invariants(m, nt_blocks, density, seed):
+    tile, c = 32, 4
+    n = nt_blocks * tile
+    h = _rand_sparse(jax.random.PRNGKey(seed), m, n, density)
+    tw = twell.pack(h, tile, c)
+    tc = tile // c
+    nnz_true = np.asarray((h != 0).reshape(m, nt_blocks, tile).sum(-1))
+    # 1. counts are exact (clipped at slot budget)
+    np.testing.assert_array_equal(np.asarray(tw.nnz),
+                                  np.minimum(nnz_true, tc))
+    # 2. overflow flag iff any tile exceeds budget
+    assert bool(tw.overflow) == bool((nnz_true > tc).any())
+    # 3. stored indices fall inside their tile
+    idx = np.asarray(tw.indices).reshape(m, nt_blocks, tc)
+    for t in range(nt_blocks):
+        valid = np.arange(tc)[None, :] < np.asarray(tw.nnz)[:, t:t + 1]
+        assert ((idx[:, t][valid] >= t * tile) &
+                (idx[:, t][valid] < (t + 1) * tile)).all()
+    # 4. unpack is a partial inverse: reconstructs exactly the kept entries
+    dense = np.asarray(twell.unpack(tw))
+    kept = dense != 0
+    np.testing.assert_allclose(dense[kept], np.asarray(h)[kept], rtol=1e-6)
+    assert kept.sum() == np.minimum(nnz_true, tc).sum()
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.02, 0.3))
+def test_fused_ffn_reference_matches_dense(seed, density):
+    """Eq. 3 gather formulation == dense (hu * hg) @ wd on the pattern."""
+    key = jax.random.PRNGKey(seed)
+    m, k, n, tile, c = 4, 16, 64, 32, 4
+    x = jax.random.normal(key, (m, k))
+    wu = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+    wd = jax.random.normal(jax.random.fold_in(key, 2), (n, k)) * 0.1
+    hg = _rand_sparse(jax.random.fold_in(key, 3), m, n, density)
+    tw = twell.pack(hg, tile, c)
+    hypothesis.assume(not bool(tw.overflow))
+    y = twell.fused_ffn_reference(x, tw, wu, wd)
+    y_dense = ((x @ wu) * hg) @ wd
+    np.testing.assert_allclose(y, y_dense, rtol=5e-3, atol=5e-3)
+
+
+def test_tile_activity():
+    h = jnp.zeros((8, 64)).at[3, 40].set(1.0)
+    tw = twell.pack(h, 32, 4)
+    act = twell.tile_activity(tw, row_block=4)       # (2 blocks, 2 tiles)
+    assert act.shape == (2, 2)
+    assert act[0, 1] == 1 and act[0, 0] == 0 and act[1].sum() == 0
