@@ -166,11 +166,13 @@ def _hybrid_gated(x, wg, wu, wd, ell_width, num_dense_rows, act_name):
 
 
 def _packed_stats(h: hybrid_fmt.HybridActs):
-    """(row_nnz, neuron_active) from the packed representation — no dense MxN."""
+    """(row_nnz, neuron_active) from the packed representation — no dense MxN.
+    Returned as float32: integer/bool custom_vjp outputs get float0
+    cotangents, which jax.checkpoint cannot reduce on older jax releases."""
     active = jnp.zeros((h.n,), bool).at[h.ell_indices.reshape(-1)].max(
         h.ell_values.reshape(-1) != 0)
     active = active | jnp.any(h.dense_rows != 0, axis=0)
-    return h.row_nnz, active
+    return h.row_nnz.astype(jnp.float32), active.astype(jnp.float32)
 
 
 def _hybrid_gated_fwd_impl(x, wg, wu, wd, ell_width, num_dense_rows, act_name):
@@ -299,7 +301,7 @@ def _hybrid_apply(params, x, scfg: SparsityConfig, gated: bool):
         "l1": l1,
         "nnz_mean": row_nnz.astype(jnp.float32).mean(),
         "nnz_max": row_nnz.max().astype(jnp.int32),
-        "neuron_active": active,
+        "neuron_active": active > 0,
     }
     return y, aux
 

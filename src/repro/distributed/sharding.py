@@ -167,10 +167,21 @@ def make_cache_specs(cache_shapes: Any, cfg, mesh: Mesh) -> Any:
 # activation constraints
 # --------------------------------------------------------------------------- #
 
+def current_mesh():
+    """The ambient mesh, or None. jax>=0.5 exposes get_abstract_mesh();
+    older releases only have the thread-local physical mesh."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    from jax.interpreters import pxla
+    m = pxla.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
 def shard_act(x: jax.Array, *spec) -> jax.Array:
     """with_sharding_constraint that degrades to a no-op when no mesh axes of
     the spec exist (single-device smoke tests) or dims don't divide."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))

@@ -1,10 +1,11 @@
-"""Batched serving driver: prefill + decode with the TwELL inference path.
+"""Serving CLI: continuous-batching engine over the TwELL inference path.
 
-Demonstrates the paper's two-kernel-launch FFN pipeline end to end: the gate
-projection packs activations to TwELL inside the matmul (Algorithm 1) and
-the fused up+down projection consumes them (Algorithm 2 / Eq. 3) — selected
-via ``--ffn-impl gather`` (CPU executes the numerically-identical reference;
-on TPU the Pallas kernels run).
+The heavy lifting lives in ``repro.serving``: a continuous-batching engine
+(``ServingEngine``) with a paged KV-cache pool, per-request sampling, and a
+pluggable FFN backend (``--ffn-impl dense | gather | tile_skip``) so the
+paper's sparse decode path (Algorithm 1/2, Eq. 3) and the dense baseline are
+one flag apart. This module is a thin CLI plus the *static reference loop*
+(``generate``) that the engine is regression-tested against.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch paper-0.5b --reduced \
@@ -15,6 +16,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,13 +27,26 @@ from repro.models import lm
 
 
 def generate(params, cfg, prompt: jax.Array, steps: int, cache_len: int,
-             greedy: bool = True, extras=None):
-    """prompt: (B, P) -> tokens (B, P+steps). Prefill then decode loop."""
+             greedy: bool = True, extras=None,
+             key: Optional[jax.Array] = None, top_k: int = 0,
+             temperature: float = 1.0):
+    """Static reference loop: prompt (B, P) -> tokens (B, P+steps).
+
+    Fixed-shape batch, monolithic cache, prefill by teacher-forcing the
+    prompt through decode (cache-exact). Kept as the numerically-trusted
+    baseline the continuous-batching engine must reproduce token-for-token
+    (greedy), and as the fallback for model families the paged engine does
+    not cover yet. Stochastic sampling threads ``key`` through the loop —
+    one fresh subkey per step (a constant per-step key would replay the
+    same draw pattern every iteration).
+    """
     b, p = prompt.shape
     cache = lm.init_cache(cfg, b, cache_len,
                           enc_len=extras["frames"].shape[1] if extras and
                           "frames" in extras else 0,
                           num_patches=cfg.num_image_tokens)
+    if key is None:
+        key = jax.random.PRNGKey(0)
 
     decode = jax.jit(lambda pr, c, t: lm.decode_step(pr, c, t, cfg),
                      donate_argnums=(1,))
@@ -42,9 +57,15 @@ def generate(params, cfg, prompt: jax.Array, steps: int, cache_len: int,
         logits, cache = decode(params, cache, toks[:, i:i + 1])
     out = [toks]
     for _ in range(steps):
-        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32) if greedy \
-            else jax.random.categorical(jax.random.PRNGKey(0),
-                                        logits[:, -1]).astype(jnp.int32)[:, None]
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            lg = logits[:, -1].astype(jnp.float32) / max(temperature, 1e-6)
+            if top_k:
+                kth = -jnp.sort(-lg, axis=-1)[:, top_k - 1, None]
+                lg = jnp.where(lg >= kth, lg, -jnp.inf)
+            nxt = jax.random.categorical(sub, lg).astype(jnp.int32)[:, None]
         out.append(nxt)
         logits, cache = decode(params, cache, nxt)
     return jnp.concatenate(out, axis=1)
@@ -59,6 +80,21 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--ffn-impl", default="gather",
                     help="dense | gather (TwELL fused path) | tile_skip")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV-cache block size (tokens)")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="engine decode-batch cap (0 = --batch)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--static", action="store_true",
+                    help="use the fixed-shape reference loop instead of the "
+                         "continuous-batching engine")
+    ap.add_argument("--check-static", action="store_true",
+                    help="greedy only: verify the engine reproduces the "
+                         "static loop token-for-token (default when "
+                         "--reduced)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -67,18 +103,57 @@ def main(argv=None):
     cfg = dataclasses.replace(
         cfg, sparsity=dataclasses.replace(cfg.sparsity,
                                           ffn_impl=args.ffn_impl))
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     params = lm.init(key, cfg)
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size, jnp.int32)
+
+    use_engine = cfg.family in ("dense", "moe") and not cfg.window \
+        and not cfg.attn_chunk and not args.static
+    if not use_engine:
+        t0 = time.time()
+        toks = generate(params, cfg, prompt, args.gen,
+                        cache_len=args.prompt_len + args.gen + 1,
+                        greedy=args.temperature <= 0, key=key,
+                        top_k=args.top_k,
+                        temperature=args.temperature or 1.0)
+        dt = time.time() - t0
+        total_new = args.batch * args.gen
+        print(f"[serve/static] generated {toks.shape} in {dt:.2f}s "
+              f"({total_new / dt:.1f} tok/s, ffn_impl={args.ffn_impl})")
+        print(np.asarray(toks[:, :16]))
+        return toks
+
+    from repro.serving import SamplingParams, ServingEngine
+    engine = ServingEngine(
+        params, cfg, backend=args.ffn_impl, block_size=args.block_size,
+        max_batch=args.max_batch or args.batch,
+        max_seq_len=args.prompt_len + args.gen, seed=args.seed)
+    # no per-request seed: each request derives its own key from the engine
+    # master key (identical prompts must not produce identical samples)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k)
     t0 = time.time()
-    toks = generate(params, cfg, prompt, args.gen,
-                    cache_len=args.prompt_len + args.gen + 1)
+    outs = engine.generate([np.asarray(prompt[i]).tolist()
+                            for i in range(args.batch)],
+                           sampling=sp, max_tokens=args.gen)
     dt = time.time() - t0
-    total_new = args.batch * args.gen
-    print(f"[serve] generated {toks.shape} in {dt:.2f}s "
-          f"({total_new / dt:.1f} tok/s, ffn_impl={args.ffn_impl})")
-    print(np.asarray(toks[:, :16]))
+    total_new = sum(len(o.token_ids) for o in outs)
+    ttft = [o.ttft for o in outs]
+    gen_toks = np.stack([o.token_ids for o in outs])
+    toks = np.concatenate([np.asarray(prompt), gen_toks], axis=1)
+    print(f"[serve/engine] generated {toks.shape} in {dt:.2f}s "
+          f"({total_new / dt:.1f} tok/s, backend={args.ffn_impl}, "
+          f"block_size={args.block_size}, "
+          f"ttft mean {np.mean(ttft) * 1e3:.1f}ms)")
+    print(toks[:, :16])
+
+    if args.temperature <= 0 and (args.check_static or args.reduced):
+        ref = np.asarray(generate(params, cfg, prompt, args.gen,
+                                  cache_len=args.prompt_len + args.gen + 1))
+        agree = (toks == ref).mean()
+        print(f"[serve/engine] static-loop agreement: {agree:.2%}")
+        assert agree == 1.0, \
+            "continuous-batching engine diverged from the static loop"
     return toks
 
 

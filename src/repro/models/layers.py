@@ -193,6 +193,54 @@ def _banded(q, k, v, scale, band_chunk: int, lookback: int,
     return out.reshape(b, s, h, hd)
 
 
+def _paged_attention(q, k, v, cache, n_heads, scale):
+    """Paged-KV attention (serving engine).
+
+    cache = {"kpool", "vpool", "block_tables", "seq_lens"} for ONE layer:
+      kpool/vpool:   (num_blocks, block_size, Hkv, hd) page pool
+      block_tables:  (B, W) int32 physical block ids (0 = reserved null block)
+      seq_lens:      (B,) int32 tokens already cached per request
+
+    q/k/v arrive roped with per-request absolute positions. Two regimes:
+      decode  (S == 1): scatter the new K/V at logical position ``seq_len``
+        into the request's page, gather its pages, masked SDPA over
+        kpos <= seq_len.
+      prefill (S > 1): fresh request, empty pages — scatter all positions
+        < seq_len (padded tail routes to the null block), plain causal SDPA
+        within the chunk.
+    Padded batch rows carry an all-null table, so their writes land in the
+    null block and their outputs are garbage the engine discards.
+    """
+    kpool, vpool = cache["kpool"], cache["vpool"]
+    bt, sl = cache["block_tables"], cache["seq_lens"]
+    b, s, hkv, hd = k.shape
+    bs_blk = kpool.shape[1]
+    if s == 1:                                     # decode: one token per row
+        blk = jnp.take_along_axis(bt, (sl // bs_blk)[:, None], axis=1)[:, 0]
+        off = sl % bs_blk
+        kpool = kpool.at[blk, off].set(k[:, 0])
+        vpool = vpool.at[blk, off].set(v[:, 0])
+        kf = repeat_kv(kpool[bt].reshape(b, -1, hkv, hd), n_heads)
+        vf = repeat_kv(vpool[bt].reshape(b, -1, hkv, hd), n_heads)
+        kpos = jnp.arange(kf.shape[1])
+        mask = (kpos[None, :] <= sl[:, None])[:, None, None, :]
+        out = _sdpa(q, kf, vf, mask, scale)
+    else:                                          # prefill chunk, no history
+        idx = jnp.arange(s)
+        valid = idx[None, :] < sl[:, None]                         # (B, S)
+        blk = jnp.where(valid, jnp.take(bt, idx // bs_blk, axis=1), 0)
+        off = jnp.broadcast_to(idx % bs_blk, (b, s))
+        kpool = kpool.at[blk.reshape(-1), off.reshape(-1)].set(
+            k.reshape(b * s, hkv, hd))
+        vpool = vpool.at[blk.reshape(-1), off.reshape(-1)].set(
+            v.reshape(b * s, hkv, hd))
+        mask = (idx[:, None] >= idx[None, :])[None, None]
+        out = _sdpa(q, repeat_kv(k, n_heads), repeat_kv(v, n_heads), mask,
+                    scale)
+    return out, {"kpool": kpool, "vpool": vpool, "block_tables": bt,
+                 "seq_lens": sl}
+
+
 def attention(params: Dict, x: jax.Array, cfg, *, positions: jax.Array,
               kind: str = "causal", kv_x: Optional[jax.Array] = None,
               cache: Optional[Dict] = None,
@@ -201,7 +249,8 @@ def attention(params: Dict, x: jax.Array, cfg, *, positions: jax.Array,
     """Unified attention.
 
     kind: causal | swa | local_chunk | cross | bidir
-    cache: decode mode — {"k","v","pos"}; x is (B, 1, D). Returns updated cache.
+    cache: decode mode — {"k","v","pos"}; x is (B, 1, D). Returns updated
+    cache. A cache carrying "kpool" selects the paged serving path instead.
     """
     b, s, d = x.shape
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -229,7 +278,9 @@ def attention(params: Dict, x: jax.Array, cfg, *, positions: jax.Array,
             kind = "causal"
 
     new_cache = None
-    if cache is not None and kind != "cross":
+    if cache is not None and "kpool" in cache:
+        out, new_cache = _paged_attention(q, k, v, cache, h, scale)
+    elif cache is not None and kind != "cross":
         # decode: append to (ring) cache. cache["k"]: (B, S_cache, Hkv, hd)
         pos = cache["pos"]                                        # scalar int
         s_cache = cache["k"].shape[1]

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.core import sparse_ffn
+from repro.distributed import sharding
 from repro.distributed.sharding import shard_act
 from repro.models import mamba2, moe, rwkv6
 from repro.models.layers import (attention, attn_init, embed_init,
@@ -50,7 +51,7 @@ def _mark(aux: Dict) -> Dict:
 
 
 def _dp():
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = sharding.current_mesh()
     if mesh is None or not mesh.axis_names:
         return None, ()
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -448,6 +449,71 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
                 "shift_cm": jnp.zeros((L, batch, cfg.d_model), dtype),
                 "pos": pos}
     raise ValueError(fam)
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int,
+                     block_size: int) -> Dict[str, jax.Array]:
+    """Block-paged KV pool for the serving engine: one shared pool of
+    fixed-size blocks instead of a monolithic (L, B, S, ...) cache per call.
+    Layout: (L, num_blocks, block_size, Hkv, hd); block 0 is the null block
+    (scatter target for padding — see repro.serving.kv_cache)."""
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged KV serving supports dense/moe families, got {cfg.family}")
+    if cfg.window or cfg.attn_chunk:
+        raise NotImplementedError(
+            "paged KV serving does not support windowed/chunked attention yet")
+    dtype = _dtype(cfg)
+    hkv, hd, L = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+    shape = (L, num_blocks, block_size, hkv, hd)
+    return {"kpool": jnp.zeros(shape, dtype), "vpool": jnp.zeros(shape, dtype)}
+
+
+def _paged_scan(params, x, pools, cfg, positions, block_tables, seq_lens):
+    fam = cfg.family
+
+    def body(xc, pk):
+        p, kp, vp = pk
+        lc = {"kpool": kp, "vpool": vp, "block_tables": block_tables,
+              "seq_lens": seq_lens}
+        xc, _, nc = _block_apply(p, xc, cfg, positions, kind="causal",
+                                 use_moe=fam == "moe", cache=lc)
+        return xc, (nc["kpool"], nc["vpool"])
+
+    x, (kps, vps) = jax.lax.scan(
+        body, x, (params["blocks"], pools["kpool"], pools["vpool"]))
+    x = norm_apply(cfg.norm, params["final_ln"], x)
+    head = params["embed"] if cfg.tied_embeddings else params["lm_head"]
+    return lm_logits(x, head), {"kpool": kps, "vpool": vps}
+
+
+def paged_prefill(params: Dict, pools: Dict, block_tables: jax.Array,
+                  tokens: jax.Array, prompt_lens: jax.Array,
+                  cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """Prefill fresh requests into the paged pool.
+
+    tokens: (B, P) right-padded prompts; prompt_lens: (B,) real lengths;
+    block_tables: (B, W). Writes roped K/V for positions < prompt_len into
+    each request's pages (padded tail -> null block) and returns
+    (logits (B, P, V), pools). Logits rows past prompt_len are garbage.
+    """
+    x = embed_lookup(params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])
+    return _paged_scan(params, x, pools, cfg, positions, block_tables,
+                       prompt_lens)
+
+
+def paged_decode_step(params: Dict, pools: Dict, block_tables: jax.Array,
+                      seq_lens: jax.Array, tokens: jax.Array,
+                      cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """Continuous-batching decode: one token per running request against the
+    shared paged pool. tokens: (B, 1); seq_lens: (B,) cached lengths (the new
+    token is written at that position). Returns (logits (B, 1, V), pools).
+    Padded rows (all-null table, seq_len 0) produce garbage logits."""
+    x = embed_lookup(params["embed"], tokens)
+    positions = seq_lens[:, None]
+    return _paged_scan(params, x, pools, cfg, positions, block_tables,
+                       seq_lens)
 
 
 def decode_step(params: Dict, cache: Dict, tokens: jax.Array,

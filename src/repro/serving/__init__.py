@@ -1,0 +1,25 @@
+"""Continuous-batching serving engine on the TwELL sparse decode path.
+
+Subsystem layout:
+  engine.py    — ``ServingEngine``: request queue, admission control, and the
+                 step loop (join-on-arrival, evict-on-EOS/max-tokens, bucketed
+                 padding so recompilation is bounded).
+  kv_cache.py  — ``PagedKVCache``: block-paged KV pool with free-list
+                 allocation and per-request block tables (replaces the
+                 monolithic per-call ``lm.init_cache`` allocation).
+  request.py   — ``Request`` / ``RequestOutput`` dataclasses + lifecycle.
+  sampling.py  — ``SamplingParams`` + batched greedy/temperature/top-k
+                 sampling with per-request PRNG keys.
+  backends.py  — ``ServingBackend`` ABC selecting the FFN execution path
+                 (dense | gather/TwELL | tile_skip) per step.
+"""
+from repro.serving.backends import ServingBackend, get_backend
+from repro.serving.engine import ServingEngine, StepStats
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.request import Request, RequestOutput
+from repro.serving.sampling import SamplingParams, sample_tokens
+
+__all__ = [
+    "ServingEngine", "StepStats", "PagedKVCache", "Request", "RequestOutput",
+    "SamplingParams", "sample_tokens", "ServingBackend", "get_backend",
+]

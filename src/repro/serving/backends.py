@@ -1,0 +1,106 @@
+"""FFN execution backends for the serving engine.
+
+The paper's serving story is one flag: the same weights decode either through
+the dense XLA path or through the TwELL sparse path (pack-in-gate-matmul +
+fused up/down projection, Algorithms 1-2 / Eq. 3). A ``ServingBackend``
+(in the spirit of sglang's ``AttentionBackend`` ABC) selects the FFN
+implementation per step kind, so dense-vs-sparse serving is
+``ServingEngine(..., backend="gather")`` vs ``backend="dense"`` — nothing
+else in the engine changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from abc import ABC, abstractmethod
+from typing import Dict, Type
+
+from repro.config import ModelConfig
+
+PREFILL = "prefill"
+DECODE = "decode"
+
+
+class ServingBackend(ABC):
+    """Selects the FFN execution path for each engine step."""
+
+    name: str = "abstract"
+
+    @abstractmethod
+    def ffn_impl(self, mode: str) -> str:
+        """The ``SparsityConfig.ffn_impl`` to run for ``mode``
+        (``prefill`` | ``decode``)."""
+        raise NotImplementedError
+
+    def configure(self, cfg: ModelConfig, mode: str) -> ModelConfig:
+        """A config whose FFN path is this backend's choice for ``mode``."""
+        if mode not in (PREFILL, DECODE):
+            raise ValueError(f"mode must be prefill|decode, got {mode!r}")
+        return dataclasses.replace(
+            cfg, sparsity=dataclasses.replace(cfg.sparsity,
+                                              ffn_impl=self.ffn_impl(mode)))
+
+    def describe(self) -> str:
+        return (f"{self.name}: prefill={self.ffn_impl(PREFILL)} "
+                f"decode={self.ffn_impl(DECODE)}")
+
+
+class DenseBackend(ServingBackend):
+    """Paper baseline: dense FFN math everywhere."""
+
+    name = "dense"
+
+    def ffn_impl(self, mode: str) -> str:
+        return "dense"
+
+
+class TwellGatherBackend(ServingBackend):
+    """TwELL sparse path (Eq. 3 fused up+down from packed gate activations).
+
+    Decode is the GEMV regime the format targets; prefill defaults to the
+    same path so sparse serving is numerically one pipeline end to end, but
+    ``prefill_impl="dense"`` gives the Polar-Sparsity-style split (dense
+    prefill, sparse decode) when prefill is compute- rather than
+    memory-bound.
+    """
+
+    name = "gather"
+
+    def __init__(self, prefill_impl: str = "gather"):
+        if prefill_impl not in ("gather", "dense"):
+            raise ValueError(f"bad prefill_impl {prefill_impl!r}")
+        self._prefill_impl = prefill_impl
+
+    def ffn_impl(self, mode: str) -> str:
+        return "gather" if mode == DECODE else self._prefill_impl
+
+
+class TileSkipBackend(ServingBackend):
+    """TPU block-skip harvest kernel (dense math on CPU)."""
+
+    name = "tile_skip"
+
+    def ffn_impl(self, mode: str) -> str:
+        return "tile_skip"
+
+
+_REGISTRY: Dict[str, Type[ServingBackend]] = {}
+
+
+def register(cls: Type[ServingBackend]) -> Type[ServingBackend]:
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+for _cls in (DenseBackend, TwellGatherBackend, TileSkipBackend):
+    register(_cls)
+
+
+def get_backend(name_or_backend, **kwargs) -> ServingBackend:
+    """Resolve a backend by name (or pass an instance through)."""
+    if isinstance(name_or_backend, ServingBackend):
+        return name_or_backend
+    try:
+        return _REGISTRY[name_or_backend](**kwargs)
+    except KeyError:
+        raise ValueError(f"unknown backend {name_or_backend!r}; "
+                         f"have {sorted(_REGISTRY)}") from None

@@ -1,0 +1,294 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+One ``step()`` is one engine iteration:
+
+  1. decode — every running request advances one token through a single
+     jitted ``lm.paged_decode_step`` call (batch padded to a power-of-two
+     bucket, so recompilation is bounded by ``log2(max_batch)``); sampling
+     (greedy / temperature / top-k, per-request PRNG keys) runs inside the
+     same jitted call. Requests hitting EOS or ``max_tokens`` are evicted
+     and their KV blocks returned to the free list.
+  2. admit — waiting requests join as soon as the batch has a slot and the
+     KV pool can cover their worst case (prompt + max_tokens blocks:
+     reservation-style admission control, so decode-time block growth can
+     never fail). Each admitted request is prefill'd through a jitted
+     ``lm.paged_prefill`` (prompt padded to a power-of-two bucket) and
+     samples its first token immediately — TTFT is one step, and the request
+     joins the next iteration's decode batch ("join-on-arrival").
+
+The FFN execution path per phase (dense | gather/TwELL | tile_skip) comes
+from the ``ServingBackend``, so sparse-vs-dense serving is one constructor
+flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import lm
+from repro.serving import sampling as sampling_mod
+from repro.serving.backends import DECODE, PREFILL, get_backend
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.request import (FINISHED, RUNNING, Request, RequestOutput)
+from repro.serving.sampling import SamplingParams
+
+
+@dataclasses.dataclass(frozen=True)
+class StepStats:
+    """Per-iteration batch composition (proof of continuous batching)."""
+
+    step: int
+    decode_batch: int        # live rows in this step's decode call
+    padded_batch: int        # bucketed batch the kernel actually ran
+    prefills: int            # requests admitted+prefilled this step
+    finished: int
+    running_after: int
+    waiting_after: int
+    free_blocks: int
+
+
+def _bucket(n: int, lo: int, hi: int) -> int:
+    """Smallest power-of-two >= n, clamped to [lo, hi]."""
+    b = lo
+    while b < n:
+        b *= 2
+    return min(b, hi)
+
+
+class ServingEngine:
+    """Continuous-batching engine serving one model on one set of weights."""
+
+    def __init__(self, params, cfg: ModelConfig, *, backend="dense",
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 max_batch: int = 8, max_seq_len: int = 256,
+                 min_prefill_bucket: int = 16, seed: int = 0,
+                 record_logits: bool = False):
+        self.backend = get_backend(backend)
+        self.params = params
+        self.cfg = cfg
+        self.cfg_prefill = self.backend.configure(cfg, PREFILL)
+        self.cfg_decode = self.backend.configure(cfg, DECODE)
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_seq_len < 1:
+            raise ValueError(f"max_seq_len must be >= 1, got {max_seq_len}")
+        self.max_batch = max_batch
+        self.max_seq_len = max_seq_len
+        self.min_prefill_bucket = min_prefill_bucket
+        self.record_logits = record_logits
+        if num_blocks is None:
+            # enough for a full batch of worst-case requests, + null block
+            num_blocks = 1 + max_batch * (-(-max_seq_len // block_size))
+        self.kv = PagedKVCache(cfg, num_blocks, block_size)
+        self.table_width = -(-max_seq_len // block_size)
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []
+        self.stats: List[StepStats] = []
+        self._master_key = jax.random.PRNGKey(seed)
+        self._next_rid = 0
+        self._step_idx = 0
+        self._reserved = 0            # growth blocks promised to running reqs
+        self._decode_fns: Dict[int, callable] = {}
+        self._prefill_fns: Dict[int, callable] = {}
+
+    # ------------------------------------------------------------------ API
+
+    def add_request(self, prompt: Sequence[int], *,
+                    sampling: Optional[SamplingParams] = None,
+                    max_tokens: int = 16,
+                    eos_token_id: Optional[int] = None) -> int:
+        """Queue a request; returns its id. Admission happens in step()."""
+        sp = sampling or SamplingParams()
+        req = Request(rid=self._next_rid, prompt=list(map(int, prompt)),
+                      max_tokens=max_tokens, sampling=sp,
+                      eos_token_id=eos_token_id)
+        if req.seq_len + max_tokens > self.max_seq_len:
+            raise ValueError(
+                f"prompt ({len(req.prompt)}) + max_tokens ({max_tokens}) "
+                f"exceeds max_seq_len ({self.max_seq_len})")
+        worst = self.kv.blocks_for(len(req.prompt) + max_tokens)
+        if worst > self.kv.num_blocks - 1:
+            raise ValueError(
+                f"request needs {worst} KV blocks but the pool only has "
+                f"{self.kv.num_blocks - 1}; it could never be admitted")
+        req.base_key = (jax.random.PRNGKey(sp.seed) if sp.seed is not None
+                        else jax.random.fold_in(self._master_key, req.rid))
+        if self.record_logits:
+            req.logits_trace = []
+        self._next_rid += 1
+        self.waiting.append(req)
+        return req.rid
+
+    def has_unfinished(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def step(self) -> List[RequestOutput]:
+        """One engine iteration: decode running batch, then admit+prefill.
+        Returns the requests that finished during this iteration."""
+        finished: List[RequestOutput] = []
+        decode_batch = padded = 0
+        if self.running:
+            decode_batch, padded, fin = self._decode()
+            finished.extend(fin)
+        admitted, fin = self._admit()
+        finished.extend(fin)
+        self._step_idx += 1
+        self.stats.append(StepStats(
+            step=self._step_idx, decode_batch=decode_batch,
+            padded_batch=padded, prefills=admitted, finished=len(finished),
+            running_after=len(self.running), waiting_after=len(self.waiting),
+            free_blocks=self.kv.num_free))
+        return finished
+
+    def generate(self, prompts: Sequence[Sequence[int]], *,
+                 sampling: Optional[SamplingParams] = None,
+                 max_tokens: int = 16,
+                 eos_token_id: Optional[int] = None) -> List[RequestOutput]:
+        """Convenience driver: submit everything, drain, return in order."""
+        rids = [self.add_request(p, sampling=sampling, max_tokens=max_tokens,
+                                 eos_token_id=eos_token_id) for p in prompts]
+        outs: Dict[int, RequestOutput] = {}
+        while self.has_unfinished():
+            for o in self.step():
+                outs[o.rid] = o
+        return [outs[r] for r in rids]
+
+    # ------------------------------------------------------------ internals
+
+    def _jit_decode(self, padded_batch: int, greedy: bool):
+        if (padded_batch, greedy) not in self._decode_fns:
+            cfg = self.cfg_decode
+
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def fn(params, pools, bt, sl, toks, keys, temps, topks):
+                logits, pools = lm.paged_decode_step(params, pools, bt, sl,
+                                                     toks, cfg)
+                last = logits[:, -1]
+                # all-greedy fast path: skip the O(V log V) top-k sort and
+                # categorical draw entirely (the hot serving configuration)
+                tok = jnp.argmax(last, -1).astype(jnp.int32) if greedy else \
+                    sampling_mod.sample_tokens(last, keys, temps, topks)
+                return tok, last, pools
+            self._decode_fns[(padded_batch, greedy)] = fn
+        return self._decode_fns[(padded_batch, greedy)]
+
+    def _jit_prefill(self, padded_len: int, greedy: bool):
+        if (padded_len, greedy) not in self._prefill_fns:
+            cfg = self.cfg_prefill
+
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def fn(params, pools, bt, toks, plen, keys, temps, topks):
+                logits, pools = lm.paged_prefill(params, pools, bt, toks,
+                                                 plen, cfg)
+                last = jnp.take_along_axis(
+                    logits, (plen - 1)[:, None, None], axis=1)[:, 0]
+                tok = jnp.argmax(last, -1).astype(jnp.int32) if greedy else \
+                    sampling_mod.sample_tokens(last, keys, temps, topks)
+                return tok, last, pools
+            self._prefill_fns[(padded_len, greedy)] = fn
+        return self._prefill_fns[(padded_len, greedy)]
+
+    def _finish(self, req: Request, reason: str) -> RequestOutput:
+        req.status = FINISHED
+        req.finish_reason = reason
+        req.finish_time = time.perf_counter()
+        self.kv.free(req.rid)
+        self._reserved -= req.reserved_blocks
+        req.reserved_blocks = 0
+        self.running = [r for r in self.running if r.rid != req.rid]
+        return RequestOutput.from_request(req)
+
+    def _decode(self):
+        batch = list(self.running)
+        b = len(batch)
+        padded = _bucket(b, 1, self.max_batch)
+        # The last sampled token is not in the cache yet: it is this step's
+        # input, written at position seq_len - 1 (= cached token count).
+        for r in batch:
+            write_pos = r.seq_len - 1
+            if write_pos // self.kv.block_size >= \
+                    len(self.kv.block_table(r.rid)):
+                self.kv.append_block(r.rid)
+                r.reserved_blocks -= 1
+                self._reserved -= 1
+        bt = self.kv.table_array([r.rid for r in batch], padded,
+                                 self.table_width)
+        sl = np.zeros((padded,), np.int32)
+        toks = np.zeros((padded, 1), np.int32)
+        temps = np.zeros((padded,), np.float32)
+        topks = np.zeros((padded,), np.int32)
+        for i, r in enumerate(batch):
+            sl[i] = r.seq_len - 1
+            toks[i, 0] = r.last_token
+            temps[i] = r.sampling.temperature
+            topks[i] = r.sampling.top_k
+        all_greedy = all(r.sampling.greedy for r in batch)
+        keys = jnp.zeros((padded, 2), jnp.uint32)
+        if not all_greedy:
+            base = jnp.stack([r.base_key for r in batch])
+            pos = jnp.asarray([len(r.output_tokens) for r in batch],
+                              jnp.int32)
+            keys = keys.at[:b].set(sampling_mod.batch_keys(base, pos))
+        fn = self._jit_decode(padded, all_greedy)
+        next_toks, logits, self.kv.pools = fn(
+            self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl),
+            jnp.asarray(toks), keys, jnp.asarray(temps), jnp.asarray(topks))
+        next_toks = np.asarray(next_toks)
+        finished = []
+        for i, r in enumerate(batch):
+            if r.logits_trace is not None:
+                r.logits_trace.append(np.asarray(logits[i], np.float32))
+            reason = r.append(next_toks[i])
+            if reason:
+                finished.append(self._finish(r, reason))
+        return b, padded, finished
+
+    def _admit(self):
+        admitted = 0
+        finished = []
+        while self.waiting and len(self.running) < self.max_batch:
+            req = self.waiting[0]
+            total = self.kv.blocks_for(len(req.prompt) + req.max_tokens)
+            if self.kv.num_free - self._reserved < total:
+                break                      # admission control: no preemption
+            self.waiting.popleft()
+            prompt_blocks = self.kv.blocks_for(len(req.prompt))
+            self.kv.allocate(req.rid, prompt_blocks)
+            req.reserved_blocks = total - prompt_blocks
+            self._reserved += req.reserved_blocks
+            req.status = RUNNING
+            self.running.append(req)
+            reason = self._prefill(req)
+            admitted += 1
+            if reason:
+                finished.append(self._finish(req, reason))
+        return admitted, finished
+
+    def _prefill(self, req: Request) -> Optional[str]:
+        p = len(req.prompt)
+        pb = _bucket(p, self.min_prefill_bucket,
+                     max(self.max_seq_len, self.min_prefill_bucket))
+        toks = np.zeros((1, pb), np.int32)
+        toks[0, :p] = req.prompt
+        bt = self.kv.table_array([req.rid], 1, self.table_width)
+        greedy = req.sampling.greedy
+        keys = jnp.zeros((1, 2), jnp.uint32) if greedy else \
+            sampling_mod.batch_keys(req.base_key[None],
+                                    jnp.zeros((1,), jnp.int32))
+        fn = self._jit_prefill(pb, greedy)
+        tok, logits, self.kv.pools = fn(
+            self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(toks),
+            jnp.asarray([p], np.int32), keys,
+            jnp.asarray([req.sampling.temperature], np.float32),
+            jnp.asarray([req.sampling.top_k], np.int32))
+        if req.logits_trace is not None:
+            req.logits_trace.append(np.asarray(logits[0], np.float32))
+        return req.append(int(np.asarray(tok)[0]))

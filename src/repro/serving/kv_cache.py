@@ -1,0 +1,110 @@
+"""Block-paged KV-cache pool with free-list allocation.
+
+Replaces the monolithic per-call ``lm.init_cache`` allocation for serving:
+one device-resident pool of fixed-size blocks is shared by all in-flight
+requests, each of which owns a *block table* (a list of physical block ids).
+Logical position ``p`` of a request lives at
+``(table[p // block_size], p % block_size)``.
+
+Block 0 is the reserved *null block*: padded batch rows and padded prompt
+positions scatter their (discarded) K/V writes there, so every jitted step
+has fully static shapes. The null block never appears in a live block table.
+
+Allocation bookkeeping is host-side (plain Python free list); only the pool
+tensors live on device. The jitted model steps take the pool pytree
+functionally (donated) and the engine swaps ``self.pools`` for the returned
+buffers each step.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import lm
+
+NULL_BLOCK = 0
+
+
+class PagedKVCache:
+    """Device KV pool + host free-list allocator + per-request block tables."""
+
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.cfg = cfg
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.pools = lm.init_paged_cache(cfg, num_blocks, block_size)
+        # LIFO free list: recently-freed blocks are reused first (locality)
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._tables: Dict[int, List[int]] = {}
+
+    # ---- capacity ----------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, num_tokens: int) -> int:
+        """Blocks needed to hold ``num_tokens`` cache slots."""
+        return -(-num_tokens // self.block_size)
+
+    def can_allocate(self, n_blocks: int) -> bool:
+        return n_blocks <= self.num_free
+
+    # ---- allocation --------------------------------------------------------
+
+    def allocate(self, rid: int, n_blocks: int) -> List[int]:
+        """Claim ``n_blocks`` for request ``rid``; raises when exhausted."""
+        if rid in self._tables:
+            raise ValueError(f"request {rid} already has a block table")
+        if not self.can_allocate(n_blocks):
+            raise MemoryError(
+                f"KV pool exhausted: want {n_blocks}, free {self.num_free}")
+        blocks = [self._free.pop() for _ in range(n_blocks)]
+        self._tables[rid] = blocks
+        return list(blocks)
+
+    def append_block(self, rid: int) -> int:
+        """Grow a request's table by one block (decode crossing a boundary)."""
+        if not self._free:
+            raise MemoryError("KV pool exhausted on append_block")
+        blk = self._free.pop()
+        self._tables[rid].append(blk)
+        return blk
+
+    def free(self, rid: int) -> None:
+        """Return all of a request's blocks to the free list."""
+        for blk in self._tables.pop(rid):
+            self._free.append(blk)
+
+    # ---- views -------------------------------------------------------------
+
+    def block_table(self, rid: int) -> List[int]:
+        return list(self._tables[rid])
+
+    def table_array(self, rids: Sequence[int], batch: int,
+                    width: int) -> np.ndarray:
+        """(batch, width) int32 block-table array, padded with the null block
+        both across unused table slots and across padded batch rows."""
+        out = np.full((batch, width), NULL_BLOCK, np.int32)
+        for i, rid in enumerate(rids):
+            tbl = self._tables[rid]
+            if len(tbl) > width:
+                raise ValueError(
+                    f"request {rid} table ({len(tbl)}) exceeds width {width}")
+            out[i, :len(tbl)] = tbl
+        return out
+
+    def check_invariants(self) -> None:
+        """Debug/test hook: free + owned partition [1, num_blocks)."""
+        owned = [b for tbl in self._tables.values() for b in tbl]
+        assert NULL_BLOCK not in owned, "null block leaked into a table"
+        assert NULL_BLOCK not in self._free, "null block leaked into free list"
+        combined = sorted(owned + self._free)
+        assert combined == list(range(1, self.num_blocks)), \
+            f"free list + tables do not partition the pool: {combined}"

@@ -1,0 +1,101 @@
+"""Request lifecycle dataclasses for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+
+from repro.serving.sampling import GREEDY, SamplingParams
+
+WAITING = "waiting"
+RUNNING = "running"
+FINISHED = "finished"
+
+FINISH_EOS = "eos"
+FINISH_LENGTH = "length"
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight generation request (mutable engine-side state)."""
+
+    rid: int
+    prompt: List[int]
+    max_tokens: int = 16
+    sampling: SamplingParams = GREEDY
+    eos_token_id: Optional[int] = None
+    arrival_time: float = dataclasses.field(default_factory=time.perf_counter)
+    # ---- engine-managed state ----------------------------------------------
+    status: str = WAITING
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+    base_key: Optional[jax.Array] = None     # per-request PRNG base key
+    logits_trace: Optional[list] = None      # per-token logits (debug mode)
+    reserved_blocks: int = 0                 # growth blocks admission promised
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    finish_reason: Optional[str] = None
+
+    def __post_init__(self):
+        if not self.prompt:
+            raise ValueError("empty prompt")
+        if self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        self.sampling.validate()
+        self.prompt = [int(t) for t in self.prompt]
+
+    @property
+    def seq_len(self) -> int:
+        """Tokens currently in the KV cache for this request."""
+        return len(self.prompt) + len(self.output_tokens)
+
+    @property
+    def last_token(self) -> int:
+        return self.output_tokens[-1] if self.output_tokens else self.prompt[-1]
+
+    def append(self, token: int, now: Optional[float] = None) -> Optional[str]:
+        """Record one generated token; returns a finish reason or None."""
+        if self.first_token_time is None:
+            self.first_token_time = time.perf_counter() if now is None else now
+        self.output_tokens.append(int(token))
+        if self.eos_token_id is not None and int(token) == self.eos_token_id:
+            return FINISH_EOS
+        if len(self.output_tokens) >= self.max_tokens:
+            return FINISH_LENGTH
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestOutput:
+    """Immutable result handed back when a request finishes."""
+
+    rid: int
+    prompt: List[int]
+    token_ids: List[int]
+    finish_reason: str
+    arrival_time: float
+    first_token_time: float
+    finish_time: float
+    logits: Optional[list] = None    # per-token logits (engine debug mode)
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token (seconds from arrival)."""
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival_time
+
+    @classmethod
+    def from_request(cls, req: Request) -> "RequestOutput":
+        return cls(rid=req.rid, prompt=list(req.prompt),
+                   token_ids=list(req.output_tokens),
+                   finish_reason=req.finish_reason or FINISH_LENGTH,
+                   arrival_time=req.arrival_time,
+                   first_token_time=req.first_token_time or req.finish_time
+                   or req.arrival_time,
+                   finish_time=req.finish_time or req.arrival_time,
+                   logits=(None if req.logits_trace is None
+                           else list(req.logits_trace)))

@@ -1,0 +1,73 @@
+"""Per-request sampling for the serving engine.
+
+``sample_tokens`` is a single jittable batched sampler: each row carries its
+own temperature, top-k, and PRNG key, so one fused call serves a batch that
+mixes greedy and stochastic requests. Keys are derived per request per
+position (``fold_in(base_key, num_generated)``), which makes stochastic
+decoding deterministic for a given seed *regardless of batch composition* —
+the same request produces the same tokens whether it runs alone or joins a
+continuous batch mid-flight. (This also fixes the historical serve.py bug
+where every step sampled with the same constant ``PRNGKey(0)``.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How to turn logits into a token. temperature<=0 means greedy."""
+
+    temperature: float = 0.0
+    top_k: int = 0                  # 0 = no truncation
+    seed: Optional[int] = None      # per-request PRNG seed (None -> engine key)
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def validate(self) -> None:
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+GREEDY = SamplingParams()
+
+
+def request_key(base_key: jax.Array, position: int) -> jax.Array:
+    """The PRNG key for a request's ``position``-th generated token."""
+    return jax.random.fold_in(base_key, position)
+
+
+def batch_keys(base_keys: jax.Array, positions: jax.Array) -> jax.Array:
+    """Vectorized ``request_key``: (B, 2) keys x (B,) positions -> (B, 2)."""
+    return jax.vmap(jax.random.fold_in)(base_keys, positions)
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array,
+                  temperatures: jax.Array, top_ks: jax.Array) -> jax.Array:
+    """Batched per-request sampling.
+
+    logits: (B, V) float; keys: (B, 2) uint32; temperatures: (B,) float;
+    top_ks: (B,) int32 (0 = unrestricted). Rows with temperature<=0 take the
+    argmax (identical to the static greedy loop); the rest draw from the
+    temperature-scaled, top-k-truncated categorical with their own key.
+    Returns (B,) int32.
+    """
+    logits = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    v = logits.shape[-1]
+    safe_t = jnp.where(temperatures > 0, temperatures, 1.0)[:, None]
+    scaled = logits / safe_t
+    # top-k: keep entries >= the k-th largest (k == 0 keeps everything)
+    kk = jnp.clip(top_ks.astype(jnp.int32), 0, v)
+    idx = jnp.clip(kk - 1, 0, v - 1)
+    sorted_desc = -jnp.sort(-scaled, axis=-1)
+    kth = jnp.take_along_axis(sorted_desc, idx[:, None], axis=-1)
+    masked = jnp.where((kk[:, None] == 0) | (scaled >= kth), scaled, -jnp.inf)
+    sampled = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
+    return jnp.where(temperatures <= 0, greedy_tok, sampled)

@@ -1,12 +1,13 @@
 """Hybrid format (Sec. 3.4): pack/unpack, matmuls, transpose, overflow
 contract — unit + hypothesis property tests."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given  # noqa: E402
 
 from repro.core import hybrid as hyb
 

@@ -1,10 +1,12 @@
 """Optimizer + schedules + gradient compression unit/property tests."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given  # noqa: E402
 
 from repro.optim import adamw
 from repro.optim.compress import (_int8_compress, _int8_decompress,

@@ -1,11 +1,12 @@
 """TwELL format semantics: pack/unpack roundtrip + invariants (hypothesis)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import twell
 
