@@ -12,6 +12,7 @@ than running as one static batch.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -25,6 +26,17 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import lm
 from repro.serving import SamplingParams, ServingEngine
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def write_bench_json(path: str, payload: dict) -> None:
+    """Machine-readable benchmark record (BENCH_*.json at the repo root) so
+    the perf trajectory is trackable across PRs."""
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
 
 
 def make_workload(num_requests: int, vocab: int, seed: int):
@@ -92,7 +104,15 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backends", default="dense,gather")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: 2 requests, dense only")
+    ap.add_argument("--json-out",
+                    default=os.path.join(REPO_ROOT, "BENCH_serving.json"),
+                    help="machine-readable results path ('' = skip)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.num_requests = 2
+        args.backends = "dense"
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -121,6 +141,16 @@ def main(argv=None):
         assert len(set(comp)) > 1, \
             "batch composition never changed — not continuous batching"
     print("# composition varies across steps: continuous batching confirmed")
+    if args.json_out:
+        write_bench_json(args.json_out, {
+            "bench": "serving",
+            "arch": cfg.name, "reduced": args.reduced,
+            "num_requests": args.num_requests,
+            "block_size": args.block_size, "max_batch": args.max_batch,
+            "smoke": args.smoke,
+            "results": [{k: v for k, v in r.items() if k != "composition"}
+                        for r in results],
+        })
     return results
 
 

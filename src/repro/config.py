@@ -26,6 +26,11 @@ class SparsityConfig:
     dense_backup_frac: float = 0.125  # backup rows = M/8 (App. B.2.1)
     # ---- execution strategy -------------------------------------------------
     ffn_impl: str = "dense"         # dense | tile_skip | gather | hybrid
+    # tile_skip only: drop (row x hidden-tile) blocks whose max |gate
+    # activation| is below this value. 0.0 = lossless (skip exact-zero tiles
+    # only). >0 trades accuracy for sparsity — the cheap "draft" regime that
+    # self-speculative decoding pairs with the exact gather/TwELL verifier.
+    tile_skip_threshold: float = 0.0
     # ---- induction schedule / mitigation (App. C.3) ------------------------
     l1_warmup_steps: int = 0        # 0 = constant coefficient (paper default)
     l1_constant_steps: int = 0      # steps at 0 before linear warmup

@@ -130,7 +130,8 @@ def _tile_skip_apply(params, x, scfg: SparsityConfig, gated: bool):
     if not gated:
         return _dense_apply(params, x, scfg, gated)
     y, h = kops.tile_skip_ffn(x, params["wg"], params["wu"], params["wd"],
-                              scfg.twell_tile, scfg.activation)
+                              scfg.twell_tile, scfg.activation,
+                              threshold=scfg.tile_skip_threshold)
     return y, _aux_from_h(h)
 
 

@@ -60,10 +60,14 @@ def twell_down_proj(tw: twell.TwellActs, wd):
     return y.astype(wd.dtype)
 
 
-def tile_skip_ffn(x, wg, wu, wd, tile: int, act: str = "relu"):
+def tile_skip_ffn(x, wg, wu, wd, tile: int, act: str = "relu",
+                  threshold: float = 0.0):
     mode = _mode()
-    if mode == "ref":
-        return ref.tile_skip_ffn(x, wg, wu, wd, tile, act)
+    # Thresholded (lossy) tile dropping runs through the reference math for
+    # now: the Pallas harvest kernel's skip predicate is `tile all-zero`;
+    # folding the |hg|<=threshold predicate into it is TPU follow-up work.
+    if mode == "ref" or threshold > 0.0:
+        return ref.tile_skip_ffn(x, wg, wu, wd, tile, act, threshold)
     from repro.kernels.sparse_ffn import tile_skip_ffn_pallas
     y, h = tile_skip_ffn_pallas(x, wg, wu, wd, tile, act,
                                 interpret=(mode == "interpret"))

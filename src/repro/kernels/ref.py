@@ -30,10 +30,23 @@ def twell_down_proj(tw: twell.TwellActs, wd) -> jax.Array:
     return jnp.dot(h, wd, preferred_element_type=jnp.float32).astype(h.dtype)
 
 
-def tile_skip_ffn(x, wg, wu, wd, tile: int, act: str = "relu"):
-    """Gated FFN, dense math (tile-skipping is numerically identity)."""
+def tile_skip_ffn(x, wg, wu, wd, tile: int, act: str = "relu",
+                  threshold: float = 0.0):
+    """Gated FFN with (row x hidden-tile) block skipping.
+
+    threshold == 0: skip only all-zero tiles — numerically identical to
+    dense math. threshold > 0: additionally drop tiles whose max |gate
+    activation| <= threshold — lossy, but the skip rate (and so the TPU
+    kernel's speedup) rises sharply with the threshold. This is the cheap
+    approximate execution path self-speculative decoding drafts with.
+    """
     hg = activation(act)(jnp.dot(x, wg, preferred_element_type=jnp.float32)
                          ).astype(x.dtype)
+    if threshold > 0.0:
+        m, n = hg.shape
+        tiles = hg.reshape(m, n // tile, tile)
+        keep = jnp.abs(tiles).max(axis=-1, keepdims=True) > threshold
+        hg = jnp.where(keep, tiles, 0).reshape(m, n)
     hu = jnp.dot(x, wu, preferred_element_type=jnp.float32).astype(x.dtype)
     h = hu * hg
     y = jnp.dot(h, wd, preferred_element_type=jnp.float32).astype(x.dtype)

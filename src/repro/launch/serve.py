@@ -63,7 +63,8 @@ def generate(params, cfg, prompt: jax.Array, steps: int, cache_len: int,
             key, sub = jax.random.split(key)
             lg = logits[:, -1].astype(jnp.float32) / max(temperature, 1e-6)
             if top_k:
-                kth = -jnp.sort(-lg, axis=-1)[:, top_k - 1, None]
+                tk = min(top_k, lg.shape[-1])    # top_k > vocab = no-op
+                kth = -jnp.sort(-lg, axis=-1)[:, tk - 1, None]
                 lg = jnp.where(lg >= kth, lg, -jnp.inf)
             nxt = jax.random.categorical(sub, lg).astype(jnp.int32)[:, None]
         out.append(nxt)
@@ -87,6 +88,16 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens per step "
+                         "(0 = off)")
+    ap.add_argument("--draft-backend", default="tile_skip",
+                    help="spec draft path: tile_skip | gather | dense")
+    ap.add_argument("--draft-threshold", type=float, default=0.0,
+                    help="tile-skip gate threshold for the draft pass "
+                         "(higher = sparser/cheaper draft, lower acceptance)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--static", action="store_true",
                     help="use the fixed-shape reference loop instead of the "
@@ -124,14 +135,19 @@ def main(argv=None):
         print(np.asarray(toks[:, :16]))
         return toks
 
-    from repro.serving import SamplingParams, ServingEngine
+    from repro.serving import SamplingParams, ServingEngine, SpecConfig
+    spec = None
+    if args.spec_k:
+        spec = SpecConfig(k=args.spec_k, draft_backend=args.draft_backend,
+                          draft_threshold=args.draft_threshold)
     engine = ServingEngine(
         params, cfg, backend=args.ffn_impl, block_size=args.block_size,
         max_batch=args.max_batch or args.batch,
-        max_seq_len=args.prompt_len + args.gen, seed=args.seed)
+        max_seq_len=args.prompt_len + args.gen, seed=args.seed, spec=spec)
     # no per-request seed: each request derives its own key from the engine
     # master key (identical prompts must not produce identical samples)
-    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p)
     t0 = time.time()
     outs = engine.generate([np.asarray(prompt[i]).tolist()
                             for i in range(args.batch)],
@@ -145,6 +161,15 @@ def main(argv=None):
           f"({total_new / dt:.1f} tok/s, backend={args.ffn_impl}, "
           f"block_size={args.block_size}, "
           f"ttft mean {np.mean(ttft) * 1e3:.1f}ms)")
+    if spec is not None:
+        drafted = sum(o.spec_drafted for o in outs)
+        accepted = sum(o.spec_accepted for o in outs)
+        steps = len(engine.stats)
+        print(f"[serve/engine] spec k={spec.k} "
+              f"draft={engine.draft_pair.describe()} "
+              f"acceptance={accepted}/{drafted} "
+              f"({accepted / max(drafted, 1):.1%}), "
+              f"{total_new / max(steps, 1):.2f} tok/step over {steps} steps")
     print(toks[:, :16])
 
     if args.temperature <= 0 and (args.check_static or args.reduced):

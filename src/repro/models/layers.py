@@ -201,10 +201,18 @@ def _paged_attention(q, k, v, cache, n_heads, scale):
       block_tables:  (B, W) int32 physical block ids (0 = reserved null block)
       seq_lens:      (B,) int32 tokens already cached per request
 
-    q/k/v arrive roped with per-request absolute positions. Two regimes:
+    q/k/v arrive roped with per-request absolute positions. Three regimes:
       decode  (S == 1): scatter the new K/V at logical position ``seq_len``
         into the request's page, gather its pages, masked SDPA over
-        kpos <= seq_len.
+        kpos <= seq_len. Optional cache["write_valid"] (B,) bool routes a
+        row's write to the null block (speculative draft steps past a
+        request's budget draft nothing).
+      verify  (S > 1, cache has "num_new"): speculative verify — the chunk
+        *appends to existing history*. Row positions are seq_len..seq_len+
+        num_new-1 (num_new (B,) valid chunk lengths; the padded tail routes
+        to the null block); K/V scatter there, then SDPA over the gathered
+        pages with mask kpos <= seq_len + j (full history + causal within
+        the chunk).
       prefill (S > 1): fresh request, empty pages — scatter all positions
         < seq_len (padded tail routes to the null block), plain causal SDPA
         within the chunk.
@@ -218,12 +226,32 @@ def _paged_attention(q, k, v, cache, n_heads, scale):
     if s == 1:                                     # decode: one token per row
         blk = jnp.take_along_axis(bt, (sl // bs_blk)[:, None], axis=1)[:, 0]
         off = sl % bs_blk
+        if "write_valid" in cache:
+            wv = cache["write_valid"]
+            blk = jnp.where(wv, blk, 0)
+            off = jnp.where(wv, off, 0)
         kpool = kpool.at[blk, off].set(k[:, 0])
         vpool = vpool.at[blk, off].set(v[:, 0])
         kf = repeat_kv(kpool[bt].reshape(b, -1, hkv, hd), n_heads)
         vf = repeat_kv(vpool[bt].reshape(b, -1, hkv, hd), n_heads)
         kpos = jnp.arange(kf.shape[1])
         mask = (kpos[None, :] <= sl[:, None])[:, None, None, :]
+        out = _sdpa(q, kf, vf, mask, scale)
+    elif "num_new" in cache:                       # verify chunk w/ history
+        idx = jnp.arange(s)
+        valid = idx[None, :] < cache["num_new"][:, None]           # (B, S)
+        pos = sl[:, None] + idx[None, :]                           # (B, S)
+        slot = jnp.clip(pos // bs_blk, 0, bt.shape[1] - 1)
+        blk = jnp.where(valid, jnp.take_along_axis(bt, slot, axis=1), 0)
+        off = jnp.where(valid, pos % bs_blk, 0)
+        kpool = kpool.at[blk.reshape(-1), off.reshape(-1)].set(
+            k.reshape(b * s, hkv, hd))
+        vpool = vpool.at[blk.reshape(-1), off.reshape(-1)].set(
+            v.reshape(b * s, hkv, hd))
+        kf = repeat_kv(kpool[bt].reshape(b, -1, hkv, hd), n_heads)
+        vf = repeat_kv(vpool[bt].reshape(b, -1, hkv, hd), n_heads)
+        kpos = jnp.arange(kf.shape[1])
+        mask = (kpos[None, None, :] <= pos[:, :, None])[:, None]
         out = _sdpa(q, kf, vf, mask, scale)
     else:                                          # prefill chunk, no history
         idx = jnp.arange(s)
@@ -237,8 +265,9 @@ def _paged_attention(q, k, v, cache, n_heads, scale):
         mask = (idx[:, None] >= idx[None, :])[None, None]
         out = _sdpa(q, repeat_kv(k, n_heads), repeat_kv(v, n_heads), mask,
                     scale)
-    return out, {"kpool": kpool, "vpool": vpool, "block_tables": bt,
-                 "seq_lens": sl}
+    out_cache = dict(cache)
+    out_cache.update(kpool=kpool, vpool=vpool)
+    return out, out_cache
 
 
 def attention(params: Dict, x: jax.Array, cfg, *, positions: jax.Array,

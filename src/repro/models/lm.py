@@ -469,13 +469,18 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
     return {"kpool": jnp.zeros(shape, dtype), "vpool": jnp.zeros(shape, dtype)}
 
 
-def _paged_scan(params, x, pools, cfg, positions, block_tables, seq_lens):
+def _paged_scan(params, x, pools, cfg, positions, block_tables, seq_lens,
+                num_new=None, write_valid=None):
     fam = cfg.family
 
     def body(xc, pk):
         p, kp, vp = pk
         lc = {"kpool": kp, "vpool": vp, "block_tables": block_tables,
               "seq_lens": seq_lens}
+        if num_new is not None:
+            lc["num_new"] = num_new
+        if write_valid is not None:
+            lc["write_valid"] = write_valid
         xc, _, nc = _block_apply(p, xc, cfg, positions, kind="causal",
                                  use_moe=fam == "moe", cache=lc)
         return xc, (nc["kpool"], nc["vpool"])
@@ -505,15 +510,43 @@ def paged_prefill(params: Dict, pools: Dict, block_tables: jax.Array,
 
 def paged_decode_step(params: Dict, pools: Dict, block_tables: jax.Array,
                       seq_lens: jax.Array, tokens: jax.Array,
-                      cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+                      cfg: ModelConfig,
+                      write_valid: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Dict]:
     """Continuous-batching decode: one token per running request against the
     shared paged pool. tokens: (B, 1); seq_lens: (B,) cached lengths (the new
-    token is written at that position). Returns (logits (B, 1, V), pools).
-    Padded rows (all-null table, seq_len 0) produce garbage logits."""
+    token is written at that position). ``write_valid`` (B,) bool routes a
+    row's KV write to the null block when False (speculative draft steps
+    past a request's token budget must leave the pool untouched). Returns
+    (logits (B, 1, V), pools). Padded rows (all-null table, seq_len 0)
+    produce garbage logits."""
     x = embed_lookup(params["embed"], tokens)
     positions = seq_lens[:, None]
     return _paged_scan(params, x, pools, cfg, positions, block_tables,
-                       seq_lens)
+                       seq_lens, write_valid=write_valid)
+
+
+def paged_verify(params: Dict, pools: Dict, block_tables: jax.Array,
+                 start_lens: jax.Array, num_new: jax.Array,
+                 tokens: jax.Array, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, Dict]:
+    """Speculative-verify forward: score a drafted chunk in one batched pass.
+
+    tokens: (B, S) — per request, the last committed token followed by its
+    drafted tokens (right-padded when a request drafted fewer than S-1);
+    start_lens: (B,) tokens already cached (the chunk is written starting
+    there, with per-request RoPE position offsets); num_new: (B,) valid chunk
+    lengths (padded tail positions route their KV writes to the null block).
+
+    Writes *exact* K/V for all valid chunk positions — overwriting whatever
+    the approximate draft pass left there — and returns
+    (logits (B, S, V), pools); logits row j scores the token following
+    position start+j. Rows >= num_new are garbage the caller discards.
+    """
+    x = embed_lookup(params["embed"], tokens)
+    positions = start_lens[:, None] + jnp.arange(tokens.shape[1])[None, :]
+    return _paged_scan(params, x, pools, cfg, positions, block_tables,
+                       start_lens, num_new=num_new)
 
 
 def decode_step(params: Dict, cache: Dict, tokens: jax.Array,

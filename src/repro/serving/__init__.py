@@ -3,23 +3,34 @@
 Subsystem layout:
   engine.py    — ``ServingEngine``: request queue, admission control, and the
                  step loop (join-on-arrival, evict-on-EOS/max-tokens, bucketed
-                 padding so recompilation is bounded).
+                 padding so recompilation is bounded; optional speculative
+                 draft->verify->rollback step for spec-eligible requests).
   kv_cache.py  — ``PagedKVCache``: block-paged KV pool with free-list
-                 allocation and per-request block tables (replaces the
-                 monolithic per-call ``lm.init_cache`` allocation).
+                 allocation, per-request block tables, and tail truncation
+                 (replaces the monolithic per-call ``lm.init_cache``
+                 allocation).
   request.py   — ``Request`` / ``RequestOutput`` dataclasses + lifecycle.
-  sampling.py  — ``SamplingParams`` + batched greedy/temperature/top-k
-                 sampling with per-request PRNG keys.
+  sampling.py  — ``SamplingParams`` + batched greedy/temperature/top-k/top-p
+                 sampling with per-request PRNG keys, and the shared
+                 ``filter_logits`` truncation the speculative verifier reuses.
   backends.py  — ``ServingBackend`` ABC selecting the FFN execution path
-                 (dense | gather/TwELL | tile_skip) per step.
+                 (dense | gather/TwELL | tile_skip) per step, plus
+                 ``DraftPair`` draft/verify pairs for speculative decoding.
+  spec/        — self-speculative decoding: ``SpecConfig``, the tile-skip
+                 ``Drafter``, the trusted-path ``Verifier`` (exact rejection
+                 sampling), and KV ``rollback``.
 """
-from repro.serving.backends import ServingBackend, get_backend
+from repro.serving.backends import (DraftPair, ServingBackend, get_backend,
+                                    make_draft_pair)
 from repro.serving.engine import ServingEngine, StepStats
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import Request, RequestOutput
-from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.serving.sampling import (SamplingParams, filter_logits,
+                                    sample_tokens)
+from repro.serving.spec import SpecConfig
 
 __all__ = [
     "ServingEngine", "StepStats", "PagedKVCache", "Request", "RequestOutput",
-    "SamplingParams", "sample_tokens", "ServingBackend", "get_backend",
+    "SamplingParams", "sample_tokens", "filter_logits", "ServingBackend",
+    "get_backend", "DraftPair", "make_draft_pair", "SpecConfig",
 ]

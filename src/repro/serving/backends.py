@@ -75,12 +75,33 @@ class TwellGatherBackend(ServingBackend):
 
 
 class TileSkipBackend(ServingBackend):
-    """TPU block-skip harvest kernel (dense math on CPU)."""
+    """TPU block-skip harvest kernel (dense math on CPU).
+
+    ``threshold > 0`` drops gate tiles whose max |activation| is below it —
+    approximate but much sparser, which is exactly the cheap execution
+    regime self-speculative decoding drafts with (the exact gather/TwELL
+    path then verifies). ``threshold == 0`` skips only all-zero tiles and
+    is numerically identical to dense math.
+    """
 
     name = "tile_skip"
 
+    def __init__(self, threshold: float = 0.0):
+        if threshold < 0:
+            raise ValueError(f"threshold must be >= 0, got {threshold}")
+        self.threshold = threshold
+
     def ffn_impl(self, mode: str) -> str:
         return "tile_skip"
+
+    def configure(self, cfg: ModelConfig, mode: str) -> ModelConfig:
+        cfg = super().configure(cfg, mode)
+        return dataclasses.replace(
+            cfg, sparsity=dataclasses.replace(
+                cfg.sparsity, tile_skip_threshold=self.threshold))
+
+    def describe(self) -> str:
+        return super().describe() + f" threshold={self.threshold}"
 
 
 _REGISTRY: Dict[str, Type[ServingBackend]] = {}
@@ -104,3 +125,33 @@ def get_backend(name_or_backend, **kwargs) -> ServingBackend:
     except KeyError:
         raise ValueError(f"unknown backend {name_or_backend!r}; "
                          f"have {sorted(_REGISTRY)}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftPair:
+    """A draft/verify execution pair over ONE set of weights.
+
+    Self-speculative decoding needs two execution paths, not two models:
+    ``draft`` is the cheap approximate path the k-token draft loop runs
+    (typically thresholded tile-skip), ``verify`` the trusted path whose
+    output distribution the engine must preserve (whatever backend the
+    engine itself serves with — dense or gather/TwELL).
+    """
+
+    draft: ServingBackend
+    verify: ServingBackend
+
+    def describe(self) -> str:
+        return (f"draft[{self.draft.describe()}] -> "
+                f"verify[{self.verify.describe()}]")
+
+
+def make_draft_pair(verify_backend, draft_backend,
+                    draft_threshold: float = 0.0) -> DraftPair:
+    """Resolve a draft/verify pair; the threshold only applies to tile_skip
+    drafts (other backends have no lossy knob)."""
+    kwargs = {}
+    if draft_backend == "tile_skip" and draft_threshold:
+        kwargs["threshold"] = draft_threshold
+    return DraftPair(draft=get_backend(draft_backend, **kwargs),
+                     verify=get_backend(verify_backend))

@@ -35,10 +35,13 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.models import lm
 from repro.serving import sampling as sampling_mod
-from repro.serving.backends import DECODE, PREFILL, get_backend
+from repro.serving.backends import (DECODE, PREFILL, get_backend,
+                                    make_draft_pair)
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import (FINISHED, RUNNING, Request, RequestOutput)
 from repro.serving.sampling import SamplingParams
+from repro.serving.spec import (Drafter, SpecConfig, Verifier,
+                                rollback_after_verify)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,13 +49,16 @@ class StepStats:
     """Per-iteration batch composition (proof of continuous batching)."""
 
     step: int
-    decode_batch: int        # live rows in this step's decode call
+    decode_batch: int        # live rows in this step's normal-decode call
     padded_batch: int        # bucketed batch the kernel actually ran
     prefills: int            # requests admitted+prefilled this step
     finished: int
     running_after: int
     waiting_after: int
     free_blocks: int
+    spec_batch: int = 0      # rows that ran draft->verify this step
+    spec_drafted: int = 0    # draft tokens proposed this step
+    spec_accepted: int = 0   # ... of which the verifier accepted
 
 
 def _bucket(n: int, lo: int, hi: int) -> int:
@@ -70,12 +76,21 @@ class ServingEngine:
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  max_batch: int = 8, max_seq_len: int = 256,
                  min_prefill_bucket: int = 16, seed: int = 0,
-                 record_logits: bool = False):
+                 record_logits: bool = False,
+                 spec: Optional[SpecConfig] = None):
         self.backend = get_backend(backend)
         self.params = params
         self.cfg = cfg
         self.cfg_prefill = self.backend.configure(cfg, PREFILL)
         self.cfg_decode = self.backend.configure(cfg, DECODE)
+        self.spec = spec
+        if spec is not None:
+            spec.validate()
+            self.draft_pair = make_draft_pair(self.backend, spec.draft_backend,
+                                              spec.draft_threshold)
+            cfg_draft = self.draft_pair.draft.configure(cfg, DECODE)
+            self.drafter = Drafter(cfg_draft, spec.k)
+            self.verifier = Verifier(self.cfg_decode, spec.k)
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_seq_len < 1:
@@ -104,12 +119,15 @@ class ServingEngine:
     def add_request(self, prompt: Sequence[int], *,
                     sampling: Optional[SamplingParams] = None,
                     max_tokens: int = 16,
-                    eos_token_id: Optional[int] = None) -> int:
-        """Queue a request; returns its id. Admission happens in step()."""
+                    eos_token_id: Optional[int] = None,
+                    no_spec: bool = False) -> int:
+        """Queue a request; returns its id. Admission happens in step().
+        ``no_spec`` opts this request out of speculative decoding (it will
+        run single-token decode even in a speculating engine)."""
         sp = sampling or SamplingParams()
         req = Request(rid=self._next_rid, prompt=list(map(int, prompt)),
                       max_tokens=max_tokens, sampling=sp,
-                      eos_token_id=eos_token_id)
+                      eos_token_id=eos_token_id, no_spec=no_spec)
         if req.seq_len + max_tokens > self.max_seq_len:
             raise ValueError(
                 f"prompt ({len(req.prompt)}) + max_tokens ({max_tokens}) "
@@ -131,13 +149,22 @@ class ServingEngine:
         return bool(self.waiting or self.running)
 
     def step(self) -> List[RequestOutput]:
-        """One engine iteration: decode running batch, then admit+prefill.
-        Returns the requests that finished during this iteration."""
+        """One engine iteration: advance the running batch (speculative
+        draft->verify for eligible requests, single-token decode for the
+        rest), then admit+prefill. Returns the requests that finished."""
         finished: List[RequestOutput] = []
         decode_batch = padded = 0
+        spec_batch = drafted = accepted = 0
         if self.running:
-            decode_batch, padded, fin = self._decode()
-            finished.extend(fin)
+            spec_rows = [r for r in self.running if self._can_spec(r)]
+            normal_rows = [r for r in self.running if not self._can_spec(r)]
+            if normal_rows:
+                decode_batch, padded, fin = self._decode(normal_rows)
+                finished.extend(fin)
+            if spec_rows:
+                spec_batch, drafted, accepted, fin = \
+                    self._spec_decode(spec_rows)
+                finished.extend(fin)
         admitted, fin = self._admit()
         finished.extend(fin)
         self._step_idx += 1
@@ -145,7 +172,8 @@ class ServingEngine:
             step=self._step_idx, decode_batch=decode_batch,
             padded_batch=padded, prefills=admitted, finished=len(finished),
             running_after=len(self.running), waiting_after=len(self.waiting),
-            free_blocks=self.kv.num_free))
+            free_blocks=self.kv.num_free, spec_batch=spec_batch,
+            spec_drafted=drafted, spec_accepted=accepted))
         return finished
 
     def generate(self, prompts: Sequence[Sequence[int]], *,
@@ -168,14 +196,15 @@ class ServingEngine:
             cfg = self.cfg_decode
 
             @functools.partial(jax.jit, donate_argnums=(1,))
-            def fn(params, pools, bt, sl, toks, keys, temps, topks):
+            def fn(params, pools, bt, sl, toks, keys, temps, topks, topps):
                 logits, pools = lm.paged_decode_step(params, pools, bt, sl,
                                                      toks, cfg)
                 last = logits[:, -1]
                 # all-greedy fast path: skip the O(V log V) top-k sort and
                 # categorical draw entirely (the hot serving configuration)
                 tok = jnp.argmax(last, -1).astype(jnp.int32) if greedy else \
-                    sampling_mod.sample_tokens(last, keys, temps, topks)
+                    sampling_mod.sample_tokens(last, keys, temps, topks,
+                                               topps)
                 return tok, last, pools
             self._decode_fns[(padded_batch, greedy)] = fn
         return self._decode_fns[(padded_batch, greedy)]
@@ -185,13 +214,14 @@ class ServingEngine:
             cfg = self.cfg_prefill
 
             @functools.partial(jax.jit, donate_argnums=(1,))
-            def fn(params, pools, bt, toks, plen, keys, temps, topks):
+            def fn(params, pools, bt, toks, plen, keys, temps, topks, topps):
                 logits, pools = lm.paged_prefill(params, pools, bt, toks,
                                                  plen, cfg)
                 last = jnp.take_along_axis(
                     logits, (plen - 1)[:, None, None], axis=1)[:, 0]
                 tok = jnp.argmax(last, -1).astype(jnp.int32) if greedy else \
-                    sampling_mod.sample_tokens(last, keys, temps, topks)
+                    sampling_mod.sample_tokens(last, keys, temps, topks,
+                                               topps)
                 return tok, last, pools
             self._prefill_fns[(padded_len, greedy)] = fn
         return self._prefill_fns[(padded_len, greedy)]
@@ -206,8 +236,13 @@ class ServingEngine:
         self.running = [r for r in self.running if r.rid != req.rid]
         return RequestOutput.from_request(req)
 
-    def _decode(self):
-        batch = list(self.running)
+    def _can_spec(self, req: Request) -> bool:
+        """Speculate when >= 2 tokens of budget remain (accepting even one
+        draft must leave room for the verifier's correction/bonus token)."""
+        return (self.spec is not None and not req.no_spec
+                and req.max_tokens - len(req.output_tokens) >= 2)
+
+    def _decode(self, batch: List[Request]):
         b = len(batch)
         padded = _bucket(b, 1, self.max_batch)
         # The last sampled token is not in the cache yet: it is this step's
@@ -225,11 +260,13 @@ class ServingEngine:
         toks = np.zeros((padded, 1), np.int32)
         temps = np.zeros((padded,), np.float32)
         topks = np.zeros((padded,), np.int32)
+        topps = np.ones((padded,), np.float32)
         for i, r in enumerate(batch):
             sl[i] = r.seq_len - 1
             toks[i, 0] = r.last_token
             temps[i] = r.sampling.temperature
             topks[i] = r.sampling.top_k
+            topps[i] = r.sampling.top_p
         all_greedy = all(r.sampling.greedy for r in batch)
         keys = jnp.zeros((padded, 2), jnp.uint32)
         if not all_greedy:
@@ -240,7 +277,8 @@ class ServingEngine:
         fn = self._jit_decode(padded, all_greedy)
         next_toks, logits, self.kv.pools = fn(
             self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl),
-            jnp.asarray(toks), keys, jnp.asarray(temps), jnp.asarray(topks))
+            jnp.asarray(toks), keys, jnp.asarray(temps), jnp.asarray(topks),
+            jnp.asarray(topps))
         next_toks = np.asarray(next_toks)
         finished = []
         for i, r in enumerate(batch):
@@ -250,6 +288,97 @@ class ServingEngine:
             if reason:
                 finished.append(self._finish(r, reason))
         return b, padded, finished
+
+    def _spec_decode(self, rows: List[Request]):
+        """Draft -> verify -> accept -> rollback for the speculating rows.
+
+        Per step each row proposes ``k_eff = min(k, remaining - 1)`` tokens
+        through the draft backend, then ONE batched trusted-backend pass
+        scores all of them; the accepted prefix plus the verifier's
+        correction/bonus token commits (>= 1 token per step guaranteed), and
+        the block-table tail covering rejected scratch positions rolls back
+        to the pool."""
+        b = len(rows)
+        k = self.spec.k
+        padded = _bucket(b, 1, self.max_batch)
+        # cover every scratch position up front: draft+verify write positions
+        # seq_len-1 .. seq_len+k_eff-1, all inside the admission reservation
+        # (k_eff <= remaining - 1 implies seq_len + k_eff <= prompt+max_tokens)
+        k_effs = []
+        for r in rows:
+            k_eff = min(k, r.max_tokens - len(r.output_tokens) - 1)
+            k_effs.append(k_eff)
+            need = self.kv.blocks_for(r.seq_len + k_eff)
+            while len(self.kv.block_table(r.rid)) < need:
+                self.kv.append_block(r.rid)
+                r.reserved_blocks -= 1
+                self._reserved -= 1
+        bt = self.kv.table_array([r.rid for r in rows], padded,
+                                 self.table_width)
+        sl0 = np.zeros((padded,), np.int32)
+        tok0 = np.zeros((padded, 1), np.int32)
+        dlen = np.zeros((padded,), np.int32)
+        temps = np.zeros((padded,), np.float32)
+        topks = np.zeros((padded,), np.int32)
+        topps = np.ones((padded,), np.float32)
+        for i, r in enumerate(rows):
+            sl0[i] = r.seq_len - 1
+            tok0[i, 0] = r.last_token
+            dlen[i] = k_effs[i]
+            temps[i] = r.sampling.temperature
+            topks[i] = r.sampling.top_k
+            topps[i] = r.sampling.top_p
+        all_greedy = all(r.sampling.greedy for r in rows)
+        keys = jnp.zeros((k, padded, 2), jnp.uint32)
+        if not all_greedy:
+            base = jnp.stack([r.base_key for r in rows])
+            pos = jnp.asarray([len(r.output_tokens) for r in rows], jnp.int32)
+            keys = keys.at[:, :b].set(jnp.stack([
+                sampling_mod.spec_batch_keys(base, pos + j,
+                                             sampling_mod.STREAM_DRAFT)
+                for j in range(k)]))
+        d_toks, d_logits, self.kv.pools = self.drafter.draft(
+            self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl0),
+            jnp.asarray(tok0), jnp.asarray(dlen), keys, jnp.asarray(temps),
+            jnp.asarray(topks), jnp.asarray(topps), greedy=all_greedy)
+        d_toks = np.asarray(d_toks)
+        verify_toks = np.zeros((padded, k + 1), np.int32)
+        verify_toks[:, 0] = tok0[:, 0]
+        verify_toks[:, 1:] = d_toks
+        num_new = dlen + (dlen > 0)            # k_eff + 1; 0 for padded rows
+        t_logits, self.kv.pools = self.verifier.verify(
+            self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl0),
+            jnp.asarray(num_new), jnp.asarray(verify_toks))
+        t_logits = np.asarray(t_logits)
+        d_logits_np = None if all_greedy else np.asarray(d_logits)
+        finished = []
+        drafted_total = accepted_total = 0
+        for i, r in enumerate(rows):
+            k_eff = k_effs[i]
+            emitted, n_acc = self.verifier.accept(
+                r, k_eff, d_toks[i, :k_eff],
+                None if d_logits_np is None else d_logits_np[i, :k_eff],
+                t_logits[i, :k_eff + 1])
+            r.spec_drafted += k_eff
+            r.spec_accepted += n_acc
+            drafted_total += k_eff
+            accepted_total += n_acc
+            reason = None
+            for j, tok in enumerate(emitted):
+                if r.logits_trace is not None:
+                    r.logits_trace.append(t_logits[i, j].astype(np.float32))
+                reason = r.append(int(tok))
+                if reason:
+                    break
+            if reason:
+                finished.append(self._finish(r, reason))
+            else:
+                # rollback: blocks past the committed length (seq_len - 1
+                # cached slots) return to the pool and the reservation
+                freed = rollback_after_verify(self.kv, r.rid, r.seq_len - 1)
+                r.reserved_blocks += freed
+                self._reserved += freed
+        return b, drafted_total, accepted_total, finished
 
     def _admit(self):
         admitted = 0
@@ -288,7 +417,8 @@ class ServingEngine:
             self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(toks),
             jnp.asarray([p], np.int32), keys,
             jnp.asarray([req.sampling.temperature], np.float32),
-            jnp.asarray([req.sampling.top_k], np.int32))
+            jnp.asarray([req.sampling.top_k], np.int32),
+            jnp.asarray([req.sampling.top_p], np.float32))
         if req.logits_trace is not None:
             req.logits_trace.append(np.asarray(logits[0], np.float32))
         return req.append(int(np.asarray(tok)[0]))

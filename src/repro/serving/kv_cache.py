@@ -82,6 +82,22 @@ class PagedKVCache:
         for blk in self._tables.pop(rid):
             self._free.append(blk)
 
+    def truncate(self, rid: int, keep_blocks: int) -> int:
+        """Shrink a request's table to its first ``keep_blocks`` blocks,
+        returning the tail blocks to the free list (speculative rollback:
+        rejected draft tokens must leave no block-accounting trace). The
+        freed blocks' contents are never read again — the table tail no
+        longer references them, and reads mask positions >= seq_len.
+        Returns the number of blocks freed."""
+        if keep_blocks < 1:
+            raise ValueError(f"keep_blocks must be >= 1, got {keep_blocks}")
+        tbl = self._tables[rid]
+        freed = 0
+        while len(tbl) > keep_blocks:
+            self._free.append(tbl.pop())
+            freed += 1
+        return freed
+
     # ---- views -------------------------------------------------------------
 
     def block_table(self, rid: int) -> List[int]:

@@ -26,6 +26,7 @@ class Request:
     max_tokens: int = 16
     sampling: SamplingParams = GREEDY
     eos_token_id: Optional[int] = None
+    no_spec: bool = False                    # opt this request out of spec
     arrival_time: float = dataclasses.field(default_factory=time.perf_counter)
     # ---- engine-managed state ----------------------------------------------
     status: str = WAITING
@@ -33,6 +34,8 @@ class Request:
     base_key: Optional[jax.Array] = None     # per-request PRNG base key
     logits_trace: Optional[list] = None      # per-token logits (debug mode)
     reserved_blocks: int = 0                 # growth blocks admission promised
+    spec_drafted: int = 0                    # draft tokens proposed for me
+    spec_accepted: int = 0                   # ... of which the verifier kept
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     finish_reason: Optional[str] = None
@@ -77,6 +80,8 @@ class RequestOutput:
     arrival_time: float
     first_token_time: float
     finish_time: float
+    spec_drafted: int = 0            # speculative tokens drafted for me
+    spec_accepted: int = 0           # ... of which the verifier accepted
     logits: Optional[list] = None    # per-token logits (engine debug mode)
 
     @property
@@ -88,6 +93,14 @@ class RequestOutput:
     def latency(self) -> float:
         return self.finish_time - self.arrival_time
 
+    @property
+    def acceptance_rate(self) -> Optional[float]:
+        """Fraction of drafted tokens the verifier accepted (None when the
+        request never went through a speculative step)."""
+        if not self.spec_drafted:
+            return None
+        return self.spec_accepted / self.spec_drafted
+
     @classmethod
     def from_request(cls, req: Request) -> "RequestOutput":
         return cls(rid=req.rid, prompt=list(req.prompt),
@@ -97,5 +110,7 @@ class RequestOutput:
                    first_token_time=req.first_token_time or req.finish_time
                    or req.arrival_time,
                    finish_time=req.finish_time or req.arrival_time,
+                   spec_drafted=req.spec_drafted,
+                   spec_accepted=req.spec_accepted,
                    logits=(None if req.logits_trace is None
                            else list(req.logits_trace)))

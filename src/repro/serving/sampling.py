@@ -1,13 +1,19 @@
 """Per-request sampling for the serving engine.
 
 ``sample_tokens`` is a single jittable batched sampler: each row carries its
-own temperature, top-k, and PRNG key, so one fused call serves a batch that
-mixes greedy and stochastic requests. Keys are derived per request per
+own temperature, top-k, top-p, and PRNG key, so one fused call serves a batch
+that mixes greedy and stochastic requests. Keys are derived per request per
 position (``fold_in(base_key, num_generated)``), which makes stochastic
 decoding deterministic for a given seed *regardless of batch composition* —
 the same request produces the same tokens whether it runs alone or joins a
 continuous batch mid-flight. (This also fixes the historical serve.py bug
 where every step sampled with the same constant ``PRNGKey(0)``.)
+
+``filter_logits`` is the single source of truth for how raw logits become a
+truncated categorical (temperature -> top-k -> top-p): the speculative
+verifier's exact rejection sampling computes its target/draft distributions
+through the *same* function, which is what makes spec decoding
+distribution-preserving rather than merely close.
 """
 from __future__ import annotations
 
@@ -23,7 +29,8 @@ class SamplingParams:
     """How to turn logits into a token. temperature<=0 means greedy."""
 
     temperature: float = 0.0
-    top_k: int = 0                  # 0 = no truncation
+    top_k: int = 0                  # 0 = no truncation (clamped to vocab)
+    top_p: float = 1.0              # 1.0 = no nucleus truncation
     seed: Optional[int] = None      # per-request PRNG seed (None -> engine key)
 
     @property
@@ -33,9 +40,16 @@ class SamplingParams:
     def validate(self) -> None:
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
 
 
 GREEDY = SamplingParams()
+
+# Independent PRNG streams for the speculative-decoding draws. Offset keeps
+# them disjoint from the plain decode stream (fold_in(base_key, position)).
+_SPEC_STREAM_BASE = 0x53504543                 # "SPEC"
+STREAM_DRAFT, STREAM_ACCEPT, STREAM_RESAMPLE = 0, 1, 2
 
 
 def request_key(base_key: jax.Array, position: int) -> jax.Array:
@@ -48,18 +62,30 @@ def batch_keys(base_keys: jax.Array, positions: jax.Array) -> jax.Array:
     return jax.vmap(jax.random.fold_in)(base_keys, positions)
 
 
-def sample_tokens(logits: jax.Array, keys: jax.Array,
-                  temperatures: jax.Array, top_ks: jax.Array) -> jax.Array:
-    """Batched per-request sampling.
+def spec_key(base_key: jax.Array, position, stream: int) -> jax.Array:
+    """Spec-decode key for one (request, position, stream) triple."""
+    return jax.random.fold_in(
+        jax.random.fold_in(base_key, _SPEC_STREAM_BASE + stream), position)
 
-    logits: (B, V) float; keys: (B, 2) uint32; temperatures: (B,) float;
-    top_ks: (B,) int32 (0 = unrestricted). Rows with temperature<=0 take the
-    argmax (identical to the static greedy loop); the rest draw from the
-    temperature-scaled, top-k-truncated categorical with their own key.
-    Returns (B,) int32.
+
+def spec_batch_keys(base_keys: jax.Array, positions: jax.Array,
+                    stream: int) -> jax.Array:
+    """Vectorized ``spec_key``: (B, 2) x (B,) -> (B, 2)."""
+    return jax.vmap(lambda b, p: spec_key(b, p, stream))(base_keys, positions)
+
+
+def filter_logits(logits: jax.Array, temperatures: jax.Array,
+                  top_ks: jax.Array,
+                  top_ps: Optional[jax.Array] = None) -> jax.Array:
+    """Temperature-scale then truncate logits to the sampling support.
+
+    logits: (B, V); temperatures: (B,) (<=0 rows are scaled by 1.0 — the
+    caller takes argmax for those); top_ks: (B,) int32, 0 = unrestricted,
+    values above V are clamped to V (so ``top_k > vocab`` is a no-op rather
+    than an invalid-k error); top_ps: (B,) in (0, 1], None or 1.0 = no
+    nucleus truncation. Returns (B, V) float32 with excluded entries -inf.
     """
     logits = logits.astype(jnp.float32)
-    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     v = logits.shape[-1]
     safe_t = jnp.where(temperatures > 0, temperatures, 1.0)[:, None]
     scaled = logits / safe_t
@@ -69,5 +95,37 @@ def sample_tokens(logits: jax.Array, keys: jax.Array,
     sorted_desc = -jnp.sort(-scaled, axis=-1)
     kth = jnp.take_along_axis(sorted_desc, idx[:, None], axis=-1)
     masked = jnp.where((kk[:, None] == 0) | (scaled >= kth), scaled, -jnp.inf)
+    if top_ps is not None:
+        # nucleus: smallest prefix of the (top-k-truncated) distribution with
+        # cumulative mass >= top_p. Token j (sorted desc) is kept iff the
+        # mass strictly before it is < top_p — the top-1 row is always kept.
+        # Rows with top_p >= 1 keep everything unconditionally: float32
+        # cumsum can round the mass before a tail token up to exactly 1.0,
+        # which would otherwise drop positive-probability tokens.
+        pp = top_ps.astype(jnp.float32)[:, None]
+        sorted_m = -jnp.sort(-masked, axis=-1)
+        probs = jax.nn.softmax(sorted_m, axis=-1)
+        before = jnp.cumsum(probs, axis=-1) - probs
+        keep = (before < pp) | (pp >= 1.0)
+        cutoff = jnp.where(keep, sorted_m, jnp.inf).min(axis=-1)
+        masked = jnp.where(masked >= cutoff[:, None], masked, -jnp.inf)
+    return masked
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array,
+                  temperatures: jax.Array, top_ks: jax.Array,
+                  top_ps: Optional[jax.Array] = None) -> jax.Array:
+    """Batched per-request sampling.
+
+    logits: (B, V) float; keys: (B, 2) uint32; temperatures: (B,) float;
+    top_ks: (B,) int32 (0 = unrestricted); top_ps: optional (B,) float
+    (1.0 = unrestricted). Rows with temperature<=0 take the argmax
+    (identical to the static greedy loop); the rest draw from the
+    temperature-scaled, top-k/top-p-truncated categorical with their own
+    key. Returns (B,) int32.
+    """
+    logits = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    masked = filter_logits(logits, temperatures, top_ks, top_ps)
     sampled = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
     return jnp.where(temperatures <= 0, greedy_tok, sampled)

@@ -1,0 +1,60 @@
+"""Self-speculative decoding for the continuous-batching engine.
+
+The paper's central claim — one set of weights, a spectrum of sparse
+execution paths whose cost drops sharply with sparsity — is exactly the
+draft/verifier pair speculative decoding wants. The high-threshold tile-skip
+path is nearly free but slightly lossy: it drafts. The gather/TwELL (or
+dense) path is exact: it verifies. No second model, no extra weights memory.
+
+Subsystem layout:
+  drafter.py   — ``Drafter``: jitted k-token autoregressive draft loop
+                 through the draft backend, writing *scratch* KV positions
+                 past each request's committed length.
+  verifier.py  — ``Verifier``: one batched multi-token verify forward
+                 through the trusted backend (overwrites the draft's
+                 approximate KV with exact values), plus exact
+                 rejection-sampling acceptance (greedy shortcut = token
+                 equality) so the output distribution matches
+                 non-speculative decoding.
+  rollback.py  — per-request KV truncation after acceptance: rejected draft
+                 positions are rolled back by shrinking the block table and
+                 returning tail blocks to the pool.
+
+The engine drives draft -> verify -> accept -> rollback per step for
+spec-eligible requests while the rest of the batch runs normal decode
+(``repro.serving.engine.ServingEngine(..., spec=SpecConfig(...))``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs for the serving engine.
+
+    k:               draft tokens proposed per engine step (per request).
+    draft_backend:   cheap execution path for the draft loop
+                     (``tile_skip`` | ``gather`` | ``dense``).
+    draft_threshold: tile-skip gate threshold for the draft pass (0 = the
+                     lossless skip; raise it to trade acceptance rate for
+                     draft speed). Ignored by non-tile_skip drafts.
+    """
+
+    k: int = 4
+    draft_backend: str = "tile_skip"
+    draft_threshold: float = 0.0
+
+    def validate(self) -> None:
+        if self.k < 1:
+            raise ValueError(f"spec k must be >= 1, got {self.k}")
+        if self.draft_threshold < 0:
+            raise ValueError(
+                f"draft_threshold must be >= 0, got {self.draft_threshold}")
+
+
+from repro.serving.spec.drafter import Drafter                     # noqa: E402
+from repro.serving.spec.rollback import rollback_after_verify      # noqa: E402
+from repro.serving.spec.verifier import Verifier                   # noqa: E402
+
+__all__ = ["SpecConfig", "Drafter", "Verifier", "rollback_after_verify"]

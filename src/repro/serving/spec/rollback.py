@@ -1,0 +1,32 @@
+"""KV rollback after speculative verification.
+
+Rejected draft tokens must leave no trace. Two mechanisms make that true:
+
+1. Values: the verify pass already overwrote every drafted position's K/V
+   with exact trusted-path values, and attention masks every position
+   >= the committed length — so stale values past the committed length are
+   unreachable, and each position is rewritten before it next becomes
+   readable. No tensor work is needed at rollback time.
+2. Blocks: the draft/verify step may have *appended* pool blocks to cover
+   scratch positions that were ultimately rejected. Those must go back to
+   the free list (and back into the request's admission reservation) or the
+   pool leaks until the request finishes — under a tight pool that is the
+   difference between admitting the next request now or stalling it.
+
+``rollback_after_verify`` implements (2): shrink the request's block table
+to exactly what its committed token count needs and return the tail blocks
+to the pool. The engine re-credits the freed blocks to the request's
+reservation, restoring the invariant
+``len(block_table) + reserved_blocks == blocks_for(prompt + max_tokens)``.
+"""
+from __future__ import annotations
+
+from repro.serving.kv_cache import PagedKVCache
+
+
+def rollback_after_verify(kv: PagedKVCache, rid: int,
+                          committed_tokens: int) -> int:
+    """Truncate ``rid``'s block table to what ``committed_tokens`` cache
+    slots need; tail blocks return to the free list. Returns the number of
+    blocks freed (the engine adds them back to the request's reservation)."""
+    return kv.truncate(rid, kv.blocks_for(max(committed_tokens, 1)))

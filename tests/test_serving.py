@@ -328,6 +328,100 @@ def test_engine_stochastic_reproducible_and_batch_independent(dense_model):
 # backends
 # --------------------------------------------------------------------------- #
 
+def test_sample_tokens_top_p_restricts_support():
+    """With a spiked distribution, a small top_p must collapse sampling to
+    the nucleus (here: the single highest-probability token)."""
+    rng = np.random.RandomState(4)
+    logits = jnp.asarray(rng.randn(2, 64), jnp.float32)
+    logits = logits.at[:, 7].set(12.0)          # ~all mass on token 7
+    for i in range(10):
+        keys = jax.random.split(jax.random.PRNGKey(i), 2)
+        toks = np.asarray(sample_tokens(
+            logits, keys, jnp.ones((2,)), jnp.zeros((2,), jnp.int32),
+            jnp.full((2,), 0.5, jnp.float32)))
+        assert (toks == 7).all()
+
+
+def test_sample_tokens_top_p_one_is_noop():
+    logits = jnp.asarray(np.random.RandomState(5).randn(3, 32), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    temps = jnp.ones((3,))
+    topks = jnp.asarray([0, 4, 16], jnp.int32)
+    a = sample_tokens(logits, keys, temps, topks)
+    b = sample_tokens(logits, keys, temps, topks, jnp.ones((3,)))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sample_tokens_top_k_above_vocab_is_clamped():
+    """top_k > V must behave exactly like top_k = 0 (no truncation) instead
+    of reaching an invalid-k sort/top_k."""
+    logits = jnp.asarray(np.random.RandomState(6).randn(2, 16), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(3), 2)
+    temps = jnp.ones((2,))
+    big = sample_tokens(logits, keys, temps, jnp.full((2,), 999, jnp.int32))
+    off = sample_tokens(logits, keys, temps, jnp.zeros((2,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(big), np.asarray(off))
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1).validate()
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="top_p"):
+            SamplingParams(top_p=bad).validate()
+    SamplingParams(temperature=0.7, top_k=10_000, top_p=0.9).validate()
+
+
+def test_engine_top_p_requests_complete(dense_model):
+    params, cfg = dense_model
+    sp = SamplingParams(temperature=0.8, top_p=0.7, seed=3)
+    engine = ServingEngine(params, cfg, block_size=4, max_batch=2,
+                           max_seq_len=32)
+    outs = engine.generate(_prompts(cfg, [6, 9], seed=21), sampling=sp,
+                           max_tokens=5)
+    assert all(len(o.token_ids) == 5 for o in outs)
+    engine.kv.check_invariants()
+
+
+# --------------------------------------------------------------------------- #
+# KV block-pool churn
+# --------------------------------------------------------------------------- #
+
+def test_pool_churn_repeated_admit_evict_cycles(dense_model):
+    """Many admit/evict generations through ONE engine: every cycle must
+    return every block to the free list (no leak, no double-free drift)."""
+    params, cfg = dense_model
+    engine = ServingEngine(params, cfg, backend="dense", block_size=4,
+                           max_batch=4, max_seq_len=32)
+    full = engine.kv.num_blocks - 1
+    for cycle in range(4):
+        prompts = _prompts(cfg, [5, 9, 7, 12], seed=cycle)
+        outs = engine.generate(prompts, max_tokens=4 + cycle)
+        assert len(outs) == 4
+        assert engine.kv.num_free == full, f"cycle {cycle} leaked blocks"
+        engine.kv.check_invariants()
+
+
+def test_pool_exhaustion_defers_without_corrupting_live_requests(dense_model):
+    """A stream of requests through a pool sized for ~one request at a time:
+    admission defers (never preempts or corrupts running requests) and all
+    outputs still match the unconstrained engine."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [8, 6, 7, 5], seed=11)
+    ref = ServingEngine(params, cfg, backend="dense", block_size=4,
+                        max_batch=4, max_seq_len=16).generate(
+        prompts, max_tokens=4)
+    tight = ServingEngine(params, cfg, backend="dense", block_size=4,
+                          num_blocks=5, max_batch=4, max_seq_len=16)
+    outs = tight.generate(prompts, max_tokens=4)
+    deferred = [s for s in tight.stats if s.waiting_after]
+    assert deferred, "pool never filled — test lost its point"
+    for o, r in zip(outs, ref):
+        assert o.token_ids == r.token_ids
+    assert tight.kv.num_free == tight.kv.num_blocks - 1
+    tight.kv.check_invariants()
+
+
 def test_backend_registry_and_configure():
     b = get_backend("gather")
     assert b.ffn_impl(DECODE) == "gather"

@@ -1,0 +1,313 @@
+"""Speculative-decoding subsystem tests.
+
+The load-bearing guarantee: greedy speculative decode is token-identical to
+non-speculative greedy decode for the same requests — asserted across
+staggered arrivals, two draft lengths, and a lossy draft threshold — and
+rejected draft tokens leave no trace in the paged KV pool (block accounting
+checked after every scenario)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import (PagedKVCache, SamplingParams, ServingEngine,
+                           SpecConfig, make_draft_pair)
+from repro.serving.spec.verifier import Verifier
+from repro.serving.request import Request
+
+
+def _cfg(ffn_impl="dense", twell_c=1):
+    base = get_config("paper-0.5b").reduced()
+    return dataclasses.replace(base, sparsity=dataclasses.replace(
+        base.sparsity, ffn_impl=ffn_impl, twell_c=twell_c))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, n).tolist() for n in lens]
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = _cfg()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _drain(engine):
+    outs = {}
+    while engine.has_unfinished():
+        for o in engine.step():
+            outs[o.rid] = o
+    return outs
+
+
+# --------------------------------------------------------------------------- #
+# rollback primitives
+# --------------------------------------------------------------------------- #
+
+def test_kv_truncate_frees_tail_and_invalidates_table(dense_model):
+    _, cfg = dense_model
+    kv = PagedKVCache(cfg, num_blocks=10, block_size=4)
+    blocks = kv.allocate(1, 5)
+    assert kv.truncate(1, 2) == 3
+    assert kv.block_table(1) == blocks[:2]          # tail invalidated
+    assert kv.num_free == 9 - 2
+    kv.check_invariants()
+    assert kv.truncate(1, 2) == 0                   # idempotent
+    w = kv.table_array([1], 1, 5)
+    assert list(w[0]) == blocks[:2] + [0, 0, 0]     # tail = null block
+    with pytest.raises(ValueError):
+        kv.truncate(1, 0)
+    kv.free(1)
+    kv.check_invariants()
+
+
+# --------------------------------------------------------------------------- #
+# greedy equivalence (the acceptance criterion)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_spec_greedy_token_identical_staggered(dense_model, k):
+    """Greedy spec decode must equal non-spec greedy decode token for token,
+    including for requests that join mid-flight, at multiple draft lengths
+    and with a lossy (thresholded) tile-skip draft."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [5, 8, 6, 11], seed=3)
+
+    def run(spec):
+        engine = ServingEngine(params, cfg, backend="dense", block_size=4,
+                               max_batch=4, max_seq_len=32, spec=spec)
+        for p in prompts[:2]:
+            engine.add_request(p, max_tokens=7)
+        for _ in range(2):
+            engine.step()
+        for p in prompts[2:]:                     # join-on-arrival mid-flight
+            engine.add_request(p, max_tokens=7)
+        outs = _drain(engine)
+        engine.kv.check_invariants()
+        assert engine.kv.num_free == engine.kv.num_blocks - 1
+        return engine, outs
+
+    _, ref = run(None)
+    spec = SpecConfig(k=k, draft_backend="tile_skip", draft_threshold=0.3)
+    engine, got = run(spec)
+    for rid in ref:
+        assert got[rid].token_ids == ref[rid].token_ids
+        assert got[rid].finish_reason == ref[rid].finish_reason
+    assert sum(s.spec_drafted for s in engine.stats) > 0
+    # spec commits > 1 token per accepted step: strictly fewer engine steps
+    assert any(s.spec_accepted for s in engine.stats)
+
+
+def test_spec_exact_draft_accepts_everything(dense_model):
+    """With a lossless draft (threshold 0 tile-skip == dense math on CPU)
+    the verifier must accept every draft, and the engine must finish in
+    fewer steps than tokens generated."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [5, 9, 7])
+    ref = ServingEngine(params, cfg, backend="dense", block_size=4,
+                        max_batch=4, max_seq_len=32).generate(
+        prompts, max_tokens=6)
+    engine = ServingEngine(params, cfg, backend="dense", block_size=4,
+                           max_batch=4, max_seq_len=32,
+                           spec=SpecConfig(k=3, draft_threshold=0.0))
+    outs = engine.generate(prompts, max_tokens=6)
+    for o, r in zip(outs, ref):
+        assert o.token_ids == r.token_ids
+        assert o.acceptance_rate == 1.0
+        assert o.spec_drafted > 0
+    total_tokens = sum(len(o.token_ids) for o in outs)
+    assert len(engine.stats) < total_tokens
+    engine.kv.check_invariants()
+
+
+def test_spec_with_gather_verifier(dense_model):
+    """TwELL gather as the trusted backend: the full self-speculative pair
+    from the paper (tile-skip drafts, exact sparse path verifies)."""
+    params, _ = dense_model
+    cfg = _cfg(ffn_impl="gather")
+    prompts = _prompts(cfg, [5, 9], seed=7)
+    ref = ServingEngine(params, cfg, backend="gather", block_size=4,
+                        max_batch=2, max_seq_len=32).generate(
+        prompts, max_tokens=6)
+    engine = ServingEngine(params, cfg, backend="gather", block_size=4,
+                           max_batch=2, max_seq_len=32,
+                           spec=SpecConfig(k=2, draft_threshold=0.3))
+    outs = engine.generate(prompts, max_tokens=6)
+    for o, r in zip(outs, ref):
+        assert o.token_ids == r.token_ids
+    engine.kv.check_invariants()
+
+
+# --------------------------------------------------------------------------- #
+# engine mechanics
+# --------------------------------------------------------------------------- #
+
+def test_spec_mixed_batch_with_no_spec_request(dense_model):
+    """A no_spec request runs single-token decode in the same step others
+    speculate (mixed batch), and never accrues draft stats."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [5, 9], seed=5)
+    engine = ServingEngine(params, cfg, backend="dense", block_size=4,
+                           max_batch=2, max_seq_len=32,
+                           spec=SpecConfig(k=2))
+    engine.add_request(prompts[0], max_tokens=6, no_spec=True)
+    engine.add_request(prompts[1], max_tokens=6)
+    outs = _drain(engine)
+    assert outs[0].spec_drafted == 0
+    assert outs[1].spec_drafted > 0
+    assert any(s.decode_batch and s.spec_batch for s in engine.stats), \
+        "no step mixed normal decode with speculation"
+    engine.kv.check_invariants()
+
+
+def test_spec_eos_mid_acceptance_discards_tail(dense_model):
+    """EOS among the committed speculative tokens must finish the request
+    there, discard everything after it, and free every block. Uses a seeded
+    stochastic request (greedy output is degenerate on an untrained model)
+    — spec draws are keyed per (request, position, stream), so the same
+    engine config replays the same trajectory up to the EOS cut."""
+    params, cfg = dense_model
+    prompt = _prompts(cfg, [6], seed=5)[0]
+    sp = SamplingParams(temperature=1.0, seed=7)
+
+    def run(eos):
+        engine = ServingEngine(params, cfg, backend="dense", block_size=4,
+                               max_batch=2, max_seq_len=32,
+                               spec=SpecConfig(k=4))
+        out = engine.generate([prompt], sampling=sp, max_tokens=8,
+                              eos_token_id=eos)[0]
+        return engine, out
+
+    _, free_run = run(None)
+    assert len(free_run.token_ids) == 8
+    eos = free_run.token_ids[2]
+    expect = free_run.token_ids[:free_run.token_ids.index(eos) + 1]
+    engine, out = run(eos)
+    assert out.finish_reason == "eos"
+    assert out.token_ids == expect
+    assert engine.kv.num_free == engine.kv.num_blocks - 1
+    engine.kv.check_invariants()
+
+
+def test_spec_respects_max_tokens_budget(dense_model):
+    """k larger than the whole output budget: k_eff clamps so the request
+    never overshoots max_tokens or its block reservation."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [5, 6], seed=9)
+    ref = ServingEngine(params, cfg, backend="dense", block_size=4,
+                        max_batch=2, max_seq_len=32).generate(
+        prompts, max_tokens=3)
+    engine = ServingEngine(params, cfg, backend="dense", block_size=4,
+                           max_batch=2, max_seq_len=32,
+                           spec=SpecConfig(k=6))
+    outs = engine.generate(prompts, max_tokens=3)
+    for o, r in zip(outs, ref):
+        assert o.token_ids == r.token_ids
+        assert len(o.token_ids) == 3
+    engine.kv.check_invariants()
+
+
+def test_spec_pool_accounting_under_tight_pool(dense_model):
+    """Speculation under a pool sized for one request at a time: scratch
+    blocks must roll back promptly so the deferred request still admits."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [8, 8], seed=9)
+    ref_outs = ServingEngine(params, cfg, backend="dense", block_size=4,
+                             num_blocks=4, max_batch=2,
+                             max_seq_len=16).generate(prompts, max_tokens=4)
+    engine = ServingEngine(params, cfg, backend="dense", block_size=4,
+                           num_blocks=4, max_batch=2, max_seq_len=16,
+                           spec=SpecConfig(k=2))
+    outs = engine.generate(prompts, max_tokens=4)
+    for o, r in zip(outs, ref_outs):
+        assert o.token_ids == r.token_ids
+    assert engine.kv.num_free == engine.kv.num_blocks - 1
+    engine.kv.check_invariants()
+
+
+def test_spec_stochastic_reproducible_and_batch_independent(dense_model):
+    """Seeded stochastic spec requests reproduce across engines and are
+    independent of batch composition (per-request, per-position,
+    per-stream keys)."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [6, 9], seed=13)
+    sp = SamplingParams(temperature=1.0, top_k=16, top_p=0.95, seed=42)
+    spec = SpecConfig(k=2)
+    solo = ServingEngine(params, cfg, block_size=4, max_batch=2,
+                         max_seq_len=32, seed=1, spec=spec).generate(
+        [prompts[0]], sampling=sp, max_tokens=6)[0]
+    batched = ServingEngine(params, cfg, block_size=4, max_batch=2,
+                            max_seq_len=32, seed=2, spec=spec).generate(
+        prompts, sampling=sp, max_tokens=6)[0]
+    assert solo.token_ids == batched.token_ids
+    assert len(solo.token_ids) == 6
+
+
+# --------------------------------------------------------------------------- #
+# verifier acceptance rule (unit)
+# --------------------------------------------------------------------------- #
+
+def _req(sampling):
+    r = Request(rid=0, prompt=[1], max_tokens=8, sampling=sampling)
+    r.base_key = jax.random.PRNGKey(0)
+    return r
+
+
+def test_accept_greedy_prefix_and_correction():
+    v = Verifier(_cfg(), k=3)
+    V = 16
+    tgt = np.zeros((4, V), np.float32)
+    tgt[0, 3] = tgt[1, 5] = tgt[2, 7] = tgt[3, 9] = 10.0
+    # drafts agree at 0, disagree at 1 -> accept 1, emit correction
+    emitted, n = v.accept(_req(SamplingParams()), 3,
+                          np.array([3, 6, 7]), None, tgt)
+    assert (emitted, n) == ([3, 5], 1)
+    # all agree -> bonus token from the last verify row
+    emitted, n = v.accept(_req(SamplingParams()), 3,
+                          np.array([3, 5, 7]), None, tgt)
+    assert (emitted, n) == ([3, 5, 7, 9], 3)
+
+
+def test_accept_stochastic_identical_dists_always_accepts():
+    """Exact rejection sampling: draft distribution == target distribution
+    implies acceptance probability min(1, p/q) = 1 at every position."""
+    v = Verifier(_cfg(), k=4)
+    rng = np.random.RandomState(0)
+    logits = rng.randn(5, 32).astype(np.float32)
+    draft = logits[:4]
+    sp = SamplingParams(temperature=0.7, top_k=8, top_p=0.9, seed=0)
+    drafted = np.array([int(np.argmax(r)) for r in draft])
+    emitted, n = v.accept(_req(sp), 4, drafted, draft, logits)
+    assert n == 4 and len(emitted) == 5
+    assert emitted[:4] == drafted.tolist()
+
+
+def test_accept_stochastic_rejection_resamples_in_support():
+    """A draft token with zero target probability must always be rejected,
+    and the resampled token must come from the target support."""
+    v = Verifier(_cfg(), k=1)
+    V = 16
+    tgt = np.full((2, V), -1e9, np.float32)
+    tgt[0, 2] = tgt[0, 3] = 5.0                 # target support = {2, 3}
+    dr = np.full((1, V), -1e9, np.float32)
+    dr[0, 5] = 5.0                              # draft puts mass on 5 only
+    sp = SamplingParams(temperature=1.0, seed=0)
+    emitted, n = v.accept(_req(sp), 1, np.array([5]), dr, tgt)
+    assert n == 0 and len(emitted) == 1
+    assert emitted[0] in (2, 3)
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="k must be"):
+        SpecConfig(k=0).validate()
+    with pytest.raises(ValueError, match="draft_threshold"):
+        SpecConfig(draft_threshold=-1.0).validate()
+    pair = make_draft_pair("dense", "tile_skip", 0.25)
+    assert pair.draft.threshold == 0.25
+    assert "draft[" in pair.describe()
