@@ -5,7 +5,13 @@ budgets, staggered arrivals) through the ``ServingEngine`` once per FFN
 backend and reports throughput (tok/s), time-to-first-token (TTFT), and the
 per-step decode-batch composition — the composition trace is the proof that
 requests join and leave the batch mid-flight (continuous batching) rather
-than running as one static batch.
+than running as one static batch. The admissible-blocks trace (free net of
+reservations, plus the reservation itself) exposes admission stalls.
+
+A second, shared-system-prompt workload runs with prefix caching on vs off:
+it reports the cache hit rate and prefill-token savings and asserts greedy
+outputs are token-identical either way (caching must be invisible except in
+cost).
 
   PYTHONPATH=src python benchmarks/bench_serving.py --reduced
 """
@@ -58,11 +64,37 @@ def make_workload(num_requests: int, vocab: int, seed: int):
     return work
 
 
+def make_shared_prefix_workload(num_requests: int, vocab: int, seed: int,
+                                prefix_len: int = 48, tail_len: int = 8):
+    """Shared-system-prompt traffic: every request = one common prefix +
+    a unique tail, staggered arrivals. The shape real fleets serve (system
+    prompts, few-shot templates) and the one prefix caching exists for."""
+    rng = np.random.RandomState(seed)
+    system = rng.randint(0, vocab, prefix_len).tolist()
+    work = []
+    for i in range(num_requests):
+        tail = rng.randint(0, vocab, tail_len).tolist()
+        work.append((i * 2, system + tail, 8))
+    return work
+
+
 def run_backend(params, cfg, backend: str, work, *, block_size: int,
-                max_batch: int, max_seq_len: int):
+                max_batch: int, max_seq_len: int, prefix_cache: bool = True,
+                prefill_chunk: int = 64):
     engine = ServingEngine(params, cfg, backend=backend,
                            block_size=block_size, max_batch=max_batch,
-                           max_seq_len=max_seq_len)
+                           max_seq_len=max_seq_len,
+                           prefix_cache=prefix_cache,
+                           prefill_chunk=prefill_chunk)
+
+    def reset_cache():
+        # measured run starts from a cold cache so hit rates reflect sharing
+        # WITHIN the workload, not leftovers from warmup
+        engine.kv = type(engine.kv)(engine.kv.cfg, engine.kv.num_blocks,
+                                    engine.kv.block_size)
+        engine.prefill_tokens_total = 0
+        engine.cached_tokens_total = 0
+        engine.prompt_tokens_total = 0
 
     def replay():
         outs = {}
@@ -82,16 +114,26 @@ def run_backend(params, cfg, backend: str, work, *, block_size: int,
     # bucket this workload hits by replaying it once on the SAME engine
     replay()
     engine.stats.clear()
+    reset_cache()                 # device pool realloc stays OUTSIDE the timer
     t0 = time.perf_counter()
     outs = replay()
     wall = time.perf_counter() - t0
     total = sum(len(o.token_ids) for o in outs.values())
     ttfts = np.array([o.ttft for o in outs.values()])
     comp = [s.decode_batch for s in engine.stats]
+    prompt_toks = engine.prompt_tokens_total
     return {"backend": backend, "wall": wall, "tokens": total,
             "toks_per_s": total / wall, "ttft_mean_ms": ttfts.mean() * 1e3,
             "ttft_p90_ms": float(np.percentile(ttfts, 90)) * 1e3,
-            "steps": len(engine.stats), "composition": comp}
+            "steps": len(engine.stats), "composition": comp,
+            "free_trace": [s.free_blocks for s in engine.stats],
+            "reserved_trace": [s.reserved_blocks for s in engine.stats],
+            "prefix_cache": prefix_cache,
+            "prompt_tokens": prompt_toks,
+            "prefill_tokens": engine.prefill_tokens_total,
+            "cached_tokens": engine.cached_tokens_total,
+            "cache_hit_rate": engine.cached_tokens_total / max(prompt_toks, 1),
+            "outputs": {rid: o.token_ids for rid, o in outs.items()}}
 
 
 def main(argv=None):
@@ -109,10 +151,14 @@ def main(argv=None):
     ap.add_argument("--json-out",
                     default=os.path.join(REPO_ROOT, "BENCH_serving.json"),
                     help="machine-readable results path ('' = skip)")
+    ap.add_argument("--prefill-chunk", type=int, default=64)
+    ap.add_argument("--shared-prefix-requests", type=int, default=6,
+                    help="requests in the shared-system-prompt workload")
     args = ap.parse_args(argv)
     if args.smoke:
         args.num_requests = 2
         args.backends = "dense"
+        args.shared_prefix_requests = 3
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -130,7 +176,8 @@ def main(argv=None):
     for backend in args.backends.split(","):
         r = run_backend(params, cfg, backend.strip(), work,
                         block_size=args.block_size,
-                        max_batch=args.max_batch, max_seq_len=max_seq_len)
+                        max_batch=args.max_batch, max_seq_len=max_seq_len,
+                        prefill_chunk=args.prefill_chunk)
         results.append(r)
         print(f"{r['backend']},{r['toks_per_s']:.1f},"
               f"{r['ttft_mean_ms']:.1f},{r['ttft_p90_ms']:.1f},"
@@ -138,18 +185,60 @@ def main(argv=None):
     for r in results:
         comp = r["composition"]
         print(f"# {r['backend']} decode-batch per step: {comp}")
+        print(f"# {r['backend']} admissible/reserved blocks per step: "
+              f"{list(zip(r['free_trace'], r['reserved_trace']))}")
         assert len(set(comp)) > 1, \
             "batch composition never changed — not continuous batching"
     print("# composition varies across steps: continuous batching confirmed")
+
+    # ---- shared-system-prompt workload: prefix caching on vs off ----------
+    shared = make_shared_prefix_workload(args.shared_prefix_requests,
+                                         cfg.vocab_size, args.seed)
+    shared_seq = max(len(p) + m for _, p, m in shared)
+    shared_seq = -(-shared_seq // args.block_size) * args.block_size
+    backend0 = args.backends.split(",")[0].strip()
+    cache_runs = {}
+    for on in (False, True):
+        cache_runs[on] = run_backend(
+            params, cfg, backend0, shared, block_size=args.block_size,
+            max_batch=args.max_batch, max_seq_len=shared_seq,
+            prefix_cache=on, prefill_chunk=args.prefill_chunk)
+    hit, miss = cache_runs[True], cache_runs[False]
+    assert hit["outputs"] == miss["outputs"], \
+        "prefix caching changed greedy outputs"
+    assert hit["prefill_tokens"] < miss["prefill_tokens"], (
+        f"caching saved nothing: {hit['prefill_tokens']} vs "
+        f"{miss['prefill_tokens']} prefill tokens")
+    assert hit["cache_hit_rate"] > 0
+    savings = 1 - hit["prefill_tokens"] / miss["prefill_tokens"]
+    print(f"# shared-prefix workload ({args.shared_prefix_requests} reqs): "
+          f"hit rate {hit['cache_hit_rate']:.1%}, prefill tokens "
+          f"{miss['prefill_tokens']} -> {hit['prefill_tokens']} "
+          f"({savings:.1%} saved), outputs identical")
+
+    def trim(r):
+        return {k: v for k, v in r.items()
+                if k not in ("composition", "outputs", "free_trace",
+                             "reserved_trace")}
+
     if args.json_out:
         write_bench_json(args.json_out, {
             "bench": "serving",
             "arch": cfg.name, "reduced": args.reduced,
             "num_requests": args.num_requests,
             "block_size": args.block_size, "max_batch": args.max_batch,
+            "prefill_chunk": args.prefill_chunk,
             "smoke": args.smoke,
-            "results": [{k: v for k, v in r.items() if k != "composition"}
-                        for r in results],
+            "results": [trim(r) for r in results],
+            "shared_prefix": {
+                "num_requests": args.shared_prefix_requests,
+                "cache_hit_rate": hit["cache_hit_rate"],
+                "prompt_tokens": hit["prompt_tokens"],
+                "prefill_tokens_cached": hit["prefill_tokens"],
+                "prefill_tokens_baseline": miss["prefill_tokens"],
+                "prefill_tokens_saved_frac": savings,
+                "outputs_identical": True,
+            },
         })
     return results
 

@@ -83,6 +83,11 @@ def main(argv=None):
                     help="dense | gather (TwELL fused path) | tile_skip")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged KV-cache block size (tokens)")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="max prompt tokens prefilled per engine step "
+                         "(long prompts interleave with decode)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prefix KV reuse")
     ap.add_argument("--max-batch", type=int, default=0,
                     help="engine decode-batch cap (0 = --batch)")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -143,7 +148,9 @@ def main(argv=None):
     engine = ServingEngine(
         params, cfg, backend=args.ffn_impl, block_size=args.block_size,
         max_batch=args.max_batch or args.batch,
-        max_seq_len=args.prompt_len + args.gen, seed=args.seed, spec=spec)
+        max_seq_len=args.prompt_len + args.gen, seed=args.seed, spec=spec,
+        prefix_cache=not args.no_prefix_cache,
+        prefill_chunk=args.prefill_chunk)
     # no per-request seed: each request derives its own key from the engine
     # master key (identical prompts must not produce identical samples)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
@@ -161,6 +168,10 @@ def main(argv=None):
           f"({total_new / dt:.1f} tok/s, backend={args.ffn_impl}, "
           f"block_size={args.block_size}, "
           f"ttft mean {np.mean(ttft) * 1e3:.1f}ms)")
+    if engine.prefix_cache and engine.cached_tokens_total:
+        print(f"[serve/engine] prefix cache: "
+              f"{engine.cached_tokens_total}/{engine.prompt_tokens_total} "
+              f"prompt tokens served from cache")
     if spec is not None:
         drafted = sum(o.spec_drafted for o in outs)
         accepted = sum(o.spec_accepted for o in outs)

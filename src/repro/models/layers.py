@@ -201,21 +201,20 @@ def _paged_attention(q, k, v, cache, n_heads, scale):
       block_tables:  (B, W) int32 physical block ids (0 = reserved null block)
       seq_lens:      (B,) int32 tokens already cached per request
 
-    q/k/v arrive roped with per-request absolute positions. Three regimes:
-      decode  (S == 1): scatter the new K/V at logical position ``seq_len``
+    q/k/v arrive roped with per-request absolute positions. Two regimes:
+      decode (S == 1): scatter the new K/V at logical position ``seq_len``
         into the request's page, gather its pages, masked SDPA over
         kpos <= seq_len. Optional cache["write_valid"] (B,) bool routes a
         row's write to the null block (speculative draft steps past a
         request's budget draft nothing).
-      verify  (S > 1, cache has "num_new"): speculative verify — the chunk
-        *appends to existing history*. Row positions are seq_len..seq_len+
-        num_new-1 (num_new (B,) valid chunk lengths; the padded tail routes
-        to the null block); K/V scatter there, then SDPA over the gathered
-        pages with mask kpos <= seq_len + j (full history + causal within
-        the chunk).
-      prefill (S > 1): fresh request, empty pages — scatter all positions
-        < seq_len (padded tail routes to the null block), plain causal SDPA
-        within the chunk.
+      chunk-append (S > 1, cache has "num_new"): the chunk *appends to
+        existing history* — one path serves prefill (history empty),
+        chunked/prefix-cached prefill (history = cached prefix), and
+        speculative verify (history = committed tokens). Row positions are
+        seq_len..seq_len+num_new-1 (num_new (B,) valid chunk lengths; the
+        padded tail routes to the null block); K/V scatter there, then SDPA
+        over the gathered pages with mask kpos <= seq_len + j (full history
+        + causal within the chunk).
     Padded batch rows carry an all-null table, so their writes land in the
     null block and their outputs are garbage the engine discards.
     """
@@ -237,7 +236,7 @@ def _paged_attention(q, k, v, cache, n_heads, scale):
         kpos = jnp.arange(kf.shape[1])
         mask = (kpos[None, :] <= sl[:, None])[:, None, None, :]
         out = _sdpa(q, kf, vf, mask, scale)
-    elif "num_new" in cache:                       # verify chunk w/ history
+    else:                                          # chunk-append w/ history
         idx = jnp.arange(s)
         valid = idx[None, :] < cache["num_new"][:, None]           # (B, S)
         pos = sl[:, None] + idx[None, :]                           # (B, S)
@@ -253,18 +252,6 @@ def _paged_attention(q, k, v, cache, n_heads, scale):
         kpos = jnp.arange(kf.shape[1])
         mask = (kpos[None, None, :] <= pos[:, :, None])[:, None]
         out = _sdpa(q, kf, vf, mask, scale)
-    else:                                          # prefill chunk, no history
-        idx = jnp.arange(s)
-        valid = idx[None, :] < sl[:, None]                         # (B, S)
-        blk = jnp.where(valid, jnp.take(bt, idx // bs_blk, axis=1), 0)
-        off = jnp.broadcast_to(idx % bs_blk, (b, s))
-        kpool = kpool.at[blk.reshape(-1), off.reshape(-1)].set(
-            k.reshape(b * s, hkv, hd))
-        vpool = vpool.at[blk.reshape(-1), off.reshape(-1)].set(
-            v.reshape(b * s, hkv, hd))
-        mask = (idx[:, None] >= idx[None, :])[None, None]
-        out = _sdpa(q, repeat_kv(k, n_heads), repeat_kv(v, n_heads), mask,
-                    scale)
     out_cache = dict(cache)
     out_cache.update(kpool=kpool, vpool=vpool)
     return out, out_cache

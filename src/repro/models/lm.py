@@ -470,7 +470,7 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
 
 
 def _paged_scan(params, x, pools, cfg, positions, block_tables, seq_lens,
-                num_new=None, write_valid=None):
+                num_new=None, write_valid=None, last_rows=None):
     fam = cfg.family
 
     def body(xc, pk):
@@ -487,25 +487,47 @@ def _paged_scan(params, x, pools, cfg, positions, block_tables, seq_lens,
 
     x, (kps, vps) = jax.lax.scan(
         body, x, (params["blocks"], pools["kpool"], pools["vpool"]))
+    if last_rows is not None:
+        # keep only each row's last valid hidden state before the O(V) head:
+        # the engine samples one token per request, so materializing
+        # (B, S, V) logits is pure TTFT/memory waste at large vocab
+        x = jnp.take_along_axis(x, last_rows[:, None, None], axis=1)
     x = norm_apply(cfg.norm, params["final_ln"], x)
     head = params["embed"] if cfg.tied_embeddings else params["lm_head"]
     return lm_logits(x, head), {"kpool": kps, "vpool": vps}
 
 
 def paged_prefill(params: Dict, pools: Dict, block_tables: jax.Array,
-                  tokens: jax.Array, prompt_lens: jax.Array,
-                  cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
-    """Prefill fresh requests into the paged pool.
+                  tokens: jax.Array, num_new: jax.Array,
+                  cfg: ModelConfig, start_lens: Optional[jax.Array] = None,
+                  last_only: bool = False) -> Tuple[jax.Array, Dict]:
+    """Prefill a prompt chunk into the paged pool, appending to any cached
+    history (the same chunk-append-with-history regime ``paged_verify``
+    uses — chunked prefill, prefix-cache reuse, and speculative verify are
+    one attention path).
 
-    tokens: (B, P) right-padded prompts; prompt_lens: (B,) real lengths;
-    block_tables: (B, W). Writes roped K/V for positions < prompt_len into
-    each request's pages (padded tail -> null block) and returns
-    (logits (B, P, V), pools). Logits rows past prompt_len are garbage.
+    tokens: (B, C) right-padded chunk tokens; num_new: (B,) valid chunk
+    lengths; start_lens: (B,) tokens already cached per request (None = 0
+    everywhere: a fresh full-prompt prefill, the original behavior);
+    block_tables: (B, W). Writes roped K/V for chunk positions
+    ``start + [0, num_new)`` into each request's pages with per-row RoPE
+    offsets (padded tail -> null block); the chunk attends to the cached
+    history plus itself causally.
+
+    Returns (logits, pools): ``last_only=False`` gives the full (B, C, V)
+    logits (rows past num_new are garbage) — the debug/verify escape hatch;
+    ``last_only=True`` gathers each row's last valid hidden state *before*
+    the vocab projection and returns (B, 1, V) — the serving path, which
+    only ever samples the last position.
     """
     x = embed_lookup(params["embed"], tokens)
-    positions = jnp.arange(tokens.shape[1])
+    if start_lens is None:
+        start_lens = jnp.zeros_like(num_new)
+    positions = start_lens[:, None] + jnp.arange(tokens.shape[1])[None, :]
+    last_rows = jnp.clip(num_new - 1, 0, tokens.shape[1] - 1) if last_only \
+        else None
     return _paged_scan(params, x, pools, cfg, positions, block_tables,
-                       prompt_lens)
+                       start_lens, num_new=num_new, last_rows=last_rows)
 
 
 def paged_decode_step(params: Dict, pools: Dict, block_tables: jax.Array,
@@ -542,11 +564,13 @@ def paged_verify(params: Dict, pools: Dict, block_tables: jax.Array,
     the approximate draft pass left there — and returns
     (logits (B, S, V), pools); logits row j scores the token following
     position start+j. Rows >= num_new are garbage the caller discards.
+
+    This IS the chunk-append-with-history regime: delegate to
+    ``paged_prefill`` so the verifier and the (chunked, prefix-cached)
+    prefill path can never drift apart.
     """
-    x = embed_lookup(params["embed"], tokens)
-    positions = start_lens[:, None] + jnp.arange(tokens.shape[1])[None, :]
-    return _paged_scan(params, x, pools, cfg, positions, block_tables,
-                       start_lens, num_new=num_new)
+    return paged_prefill(params, pools, block_tables, tokens, num_new, cfg,
+                         start_lens=start_lens)
 
 
 def decode_step(params: Dict, cache: Dict, tokens: jax.Array,

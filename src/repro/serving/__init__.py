@@ -1,14 +1,18 @@
 """Continuous-batching serving engine on the TwELL sparse decode path.
 
 Subsystem layout:
-  engine.py    — ``ServingEngine``: request queue, admission control, and the
-                 step loop (join-on-arrival, evict-on-EOS/max-tokens, bucketed
-                 padding so recompilation is bounded; optional speculative
+  engine.py    — ``ServingEngine``: request queue, prefix-cache-aware
+                 admission control, the chunked batched prefill scheduler
+                 (fixed-size prompt chunks interleaved with decode; same-step
+                 admissions share one dispatch), and the step loop
+                 (join-on-arrival, evict-on-EOS/max-tokens, bucketed padding
+                 so recompilation is bounded; optional speculative
                  draft->verify->rollback step for spec-eligible requests).
   kv_cache.py  — ``PagedKVCache``: block-paged KV pool with free-list
-                 allocation, per-request block tables, and tail truncation
-                 (replaces the monolithic per-call ``lm.init_cache``
-                 allocation).
+                 allocation, per-request block tables, tail truncation, and
+                 automatic prefix caching (per-block refcounts, content-hash
+                 index over full blocks, copy-on-write sharing, LRU eviction
+                 of unreferenced cached blocks).
   request.py   — ``Request`` / ``RequestOutput`` dataclasses + lifecycle.
   sampling.py  — ``SamplingParams`` + batched greedy/temperature/top-k/top-p
                  sampling with per-request PRNG keys, and the shared

@@ -149,9 +149,16 @@ class DraftPair:
 def make_draft_pair(verify_backend, draft_backend,
                     draft_threshold: float = 0.0) -> DraftPair:
     """Resolve a draft/verify pair; the threshold only applies to tile_skip
-    drafts (other backends have no lossy knob)."""
+    drafts. A nonzero threshold on any other draft backend is an error —
+    the user explicitly set a lossy knob that would otherwise be silently
+    ignored."""
     kwargs = {}
-    if draft_backend == "tile_skip" and draft_threshold:
+    if draft_threshold:
+        if draft_backend != "tile_skip":
+            raise ValueError(
+                f"draft_threshold={draft_threshold} only applies to "
+                f"tile_skip drafts; draft_backend={draft_backend!r} has no "
+                f"lossy knob (set draft_threshold=0)")
         kwargs["threshold"] = draft_threshold
     return DraftPair(draft=get_backend(draft_backend, **kwargs),
                      verify=get_backend(verify_backend))

@@ -7,14 +7,24 @@ One ``step()`` is one engine iteration:
      bucket, so recompilation is bounded by ``log2(max_batch)``); sampling
      (greedy / temperature / top-k, per-request PRNG keys) runs inside the
      same jitted call. Requests hitting EOS or ``max_tokens`` are evicted
-     and their KV blocks returned to the free list.
+     and their KV blocks released (registered prefix blocks park in the
+     cache's evictable LRU, everything else returns to the free list).
   2. admit — waiting requests join as soon as the batch has a slot and the
      KV pool can cover their worst case (prompt + max_tokens blocks:
      reservation-style admission control, so decode-time block growth can
-     never fail). Each admitted request is prefill'd through a jitted
-     ``lm.paged_prefill`` (prompt padded to a power-of-two bucket) and
-     samples its first token immediately — TTFT is one step, and the request
-     joins the next iteration's decode batch ("join-on-arrival").
+     never fail). With prefix caching on, admission first matches the
+     longest cached block-aligned prefix of the prompt and shares those
+     blocks (refcounted, copy-on-write) — only suffix blocks are newly
+     allocated, and only suffix tokens are ever computed.
+  3. prefill — ALL in-flight prefills (just-admitted and partially done)
+     advance together through ONE batched ``lm.paged_prefill`` call, at
+     most ``prefill_chunk`` tokens each. Long prompts therefore prefill in
+     fixed-size chunks interleaved with decode steps — bounded TTFT impact
+     on running requests — and same-step admissions share a single
+     dispatch. A request whose prompt completes samples its first token in
+     the same call (from the last valid row's logits only: the O(V) head
+     never materializes over the whole chunk) and joins the next
+     iteration's decode batch ("join-on-arrival").
 
 The FFN execution path per phase (dense | gather/TwELL | tile_skip) comes
 from the ``ServingBackend``, so sparse-vs-dense serving is one constructor
@@ -38,7 +48,8 @@ from repro.serving import sampling as sampling_mod
 from repro.serving.backends import (DECODE, PREFILL, get_backend,
                                     make_draft_pair)
 from repro.serving.kv_cache import PagedKVCache
-from repro.serving.request import (FINISHED, RUNNING, Request, RequestOutput)
+from repro.serving.request import (FINISHED, PREFILLING, RUNNING, Request,
+                                   RequestOutput)
 from repro.serving.sampling import SamplingParams
 from repro.serving.spec import (Drafter, SpecConfig, Verifier,
                                 rollback_after_verify)
@@ -51,11 +62,17 @@ class StepStats:
     step: int
     decode_batch: int        # live rows in this step's normal-decode call
     padded_batch: int        # bucketed batch the kernel actually ran
-    prefills: int            # requests admitted+prefilled this step
+    prefills: int            # requests admitted this step
     finished: int
     running_after: int
     waiting_after: int
-    free_blocks: int
+    free_blocks: int         # admissible capacity: free + evictable cached
+    #                          blocks NET of outstanding growth reservations
+    reserved_blocks: int = 0         # growth blocks promised to running reqs
+    cached_blocks: int = 0           # evictable prefix-cache blocks (LRU)
+    prefilling_after: int = 0        # requests mid-prefill after this step
+    prefill_tokens: int = 0          # prompt tokens computed this step
+    cached_prefix_tokens: int = 0    # prompt tokens served from cache (admits)
     spec_batch: int = 0      # rows that ran draft->verify this step
     spec_drafted: int = 0    # draft tokens proposed this step
     spec_accepted: int = 0   # ... of which the verifier accepted
@@ -77,7 +94,8 @@ class ServingEngine:
                  max_batch: int = 8, max_seq_len: int = 256,
                  min_prefill_bucket: int = 16, seed: int = 0,
                  record_logits: bool = False,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 prefix_cache: bool = True, prefill_chunk: int = 64):
         self.backend = get_backend(backend)
         self.params = params
         self.cfg = cfg
@@ -95,18 +113,27 @@ class ServingEngine:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_seq_len < 1:
             raise ValueError(f"max_seq_len must be >= 1, got {max_seq_len}")
+        if prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.max_batch = max_batch
         self.max_seq_len = max_seq_len
         self.min_prefill_bucket = min_prefill_bucket
         self.record_logits = record_logits
+        self.prefix_cache = prefix_cache
+        self.prefill_chunk = prefill_chunk
         if num_blocks is None:
             # enough for a full batch of worst-case requests, + null block
             num_blocks = 1 + max_batch * (-(-max_seq_len // block_size))
         self.kv = PagedKVCache(cfg, num_blocks, block_size)
         self.table_width = -(-max_seq_len // block_size)
         self.waiting: Deque[Request] = deque()
+        self.prefilling: List[Request] = []
         self.running: List[Request] = []
         self.stats: List[StepStats] = []
+        self.prefill_tokens_total = 0      # prompt tokens actually computed
+        self.cached_tokens_total = 0       # prompt tokens served from cache
+        self.prompt_tokens_total = 0       # prompt tokens admitted overall
         self._master_key = jax.random.PRNGKey(seed)
         self._next_rid = 0
         self._step_idx = 0
@@ -146,12 +173,14 @@ class ServingEngine:
         return req.rid
 
     def has_unfinished(self) -> bool:
-        return bool(self.waiting or self.running)
+        return bool(self.waiting or self.prefilling or self.running)
 
     def step(self) -> List[RequestOutput]:
         """One engine iteration: advance the running batch (speculative
         draft->verify for eligible requests, single-token decode for the
-        rest), then admit+prefill. Returns the requests that finished."""
+        rest), admit waiting requests (prefix-cache-aware), then advance
+        every in-flight prefill by one chunk through a single batched call.
+        Returns the requests that finished."""
         finished: List[RequestOutput] = []
         decode_batch = padded = 0
         spec_batch = drafted = accepted = 0
@@ -165,14 +194,20 @@ class ServingEngine:
                 spec_batch, drafted, accepted, fin = \
                     self._spec_decode(spec_rows)
                 finished.extend(fin)
-        admitted, fin = self._admit()
+        admitted, cached_toks = self._admit()
+        pf_tokens, fin = self._prefill_step()
         finished.extend(fin)
         self._step_idx += 1
         self.stats.append(StepStats(
             step=self._step_idx, decode_batch=decode_batch,
             padded_batch=padded, prefills=admitted, finished=len(finished),
             running_after=len(self.running), waiting_after=len(self.waiting),
-            free_blocks=self.kv.num_free, spec_batch=spec_batch,
+            free_blocks=self.kv.num_available - self._reserved,
+            reserved_blocks=self._reserved,
+            cached_blocks=self.kv.num_evictable,
+            prefilling_after=len(self.prefilling),
+            prefill_tokens=pf_tokens, cached_prefix_tokens=cached_toks,
+            spec_batch=spec_batch,
             spec_drafted=drafted, spec_accepted=accepted))
         return finished
 
@@ -209,22 +244,28 @@ class ServingEngine:
             self._decode_fns[(padded_batch, greedy)] = fn
         return self._decode_fns[(padded_batch, greedy)]
 
-    def _jit_prefill(self, padded_len: int, greedy: bool):
-        if (padded_len, greedy) not in self._prefill_fns:
+    def _jit_prefill(self, padded_batch: int, padded_chunk: int,
+                     greedy: bool):
+        key = (padded_batch, padded_chunk, greedy)
+        if key not in self._prefill_fns:
             cfg = self.cfg_prefill
 
             @functools.partial(jax.jit, donate_argnums=(1,))
-            def fn(params, pools, bt, toks, plen, keys, temps, topks, topps):
+            def fn(params, pools, bt, toks, start, num_new, keys, temps,
+                   topks, topps):
+                # last_only: the head runs on each row's final valid hidden
+                # state only — never (B, C, V) over the whole chunk
                 logits, pools = lm.paged_prefill(params, pools, bt, toks,
-                                                 plen, cfg)
-                last = jnp.take_along_axis(
-                    logits, (plen - 1)[:, None, None], axis=1)[:, 0]
+                                                 num_new, cfg,
+                                                 start_lens=start,
+                                                 last_only=True)
+                last = logits[:, 0]
                 tok = jnp.argmax(last, -1).astype(jnp.int32) if greedy else \
                     sampling_mod.sample_tokens(last, keys, temps, topks,
                                                topps)
                 return tok, last, pools
-            self._prefill_fns[(padded_len, greedy)] = fn
-        return self._prefill_fns[(padded_len, greedy)]
+            self._prefill_fns[key] = fn
+        return self._prefill_fns[key]
 
     def _finish(self, req: Request, reason: str) -> RequestOutput:
         req.status = FINISHED
@@ -234,6 +275,7 @@ class ServingEngine:
         self._reserved -= req.reserved_blocks
         req.reserved_blocks = 0
         self.running = [r for r in self.running if r.rid != req.rid]
+        self.prefilling = [r for r in self.prefilling if r.rid != req.rid]
         return RequestOutput.from_request(req)
 
     def _can_spec(self, req: Request) -> bool:
@@ -381,44 +423,128 @@ class ServingEngine:
         return b, drafted_total, accepted_total, finished
 
     def _admit(self):
+        """Move waiting requests into the prefill stage while a batch slot
+        and (prefix-cache-aware) worst-case block capacity exist. Matched
+        prefix blocks are shared instead of recomputed: only the suffix is
+        allocated fresh and only suffix tokens will be prefilled."""
         admitted = 0
-        finished = []
-        while self.waiting and len(self.running) < self.max_batch:
+        cached_tokens = 0
+        while self.waiting and \
+                len(self.running) + len(self.prefilling) < self.max_batch:
             req = self.waiting[0]
-            total = self.kv.blocks_for(len(req.prompt) + req.max_tokens)
-            if self.kv.num_free - self._reserved < total:
+            plen = len(req.prompt)
+            total = self.kv.blocks_for(plen + req.max_tokens)
+            if self.prefix_cache:
+                matched, avail = self.kv.plan_admission(req.prompt)
+            else:
+                matched, avail = [], self.kv.num_available
+            # a fully cached prompt recomputes its last position inside a
+            # matched block, which may need a copy-on-write block mid-step:
+            # budget it here (and reserve it below) or ensure_writable could
+            # steal a block promised to another request's decode growth
+            spare = 1 if len(matched) * self.kv.block_size >= plen else 0
+            if avail - self._reserved < total - len(matched) + spare:
                 break                      # admission control: no preemption
             self.waiting.popleft()
-            prompt_blocks = self.kv.blocks_for(len(req.prompt))
-            self.kv.allocate(req.rid, prompt_blocks)
-            req.reserved_blocks = total - prompt_blocks
+            prompt_blocks = self.kv.blocks_for(plen)
+            if self.prefix_cache:
+                hit = self.kv.allocate_prefix(req.rid, req.prompt,
+                                              prompt_blocks, matched=matched)
+            else:
+                self.kv.allocate(req.rid, prompt_blocks)
+                hit = 0
+            # a fully cached prompt still recomputes its last position: the
+            # engine needs that position's logits to sample the first token
+            start = min(hit, plen - 1)
+            req.prefill_pos = start
+            req.cached_prefix_tokens = start
+            cached_tokens += start
+            self.cached_tokens_total += start
+            self.prompt_tokens_total += plen
+            req.cow_spare = spare
+            req.reserved_blocks = total - prompt_blocks + spare
             self._reserved += req.reserved_blocks
-            req.status = RUNNING
-            self.running.append(req)
-            reason = self._prefill(req)
+            req.status = PREFILLING
+            self.prefilling.append(req)
             admitted += 1
-            if reason:
-                finished.append(self._finish(req, reason))
-        return admitted, finished
+        return admitted, cached_tokens
 
-    def _prefill(self, req: Request) -> Optional[str]:
-        p = len(req.prompt)
-        pb = _bucket(p, self.min_prefill_bucket,
-                     max(self.max_seq_len, self.min_prefill_bucket))
-        toks = np.zeros((1, pb), np.int32)
-        toks[0, :p] = req.prompt
-        bt = self.kv.table_array([req.rid], 1, self.table_width)
-        greedy = req.sampling.greedy
-        keys = jnp.zeros((1, 2), jnp.uint32) if greedy else \
-            sampling_mod.batch_keys(req.base_key[None],
-                                    jnp.zeros((1,), jnp.int32))
-        fn = self._jit_prefill(pb, greedy)
+    def _prefill_step(self):
+        """Advance every in-flight prefill by one chunk in ONE batched call.
+
+        Each row computes up to ``prefill_chunk`` prompt tokens starting at
+        its ``prefill_pos``, appended to whatever the cache already holds
+        (cached prefix + earlier chunks) with per-row RoPE offsets. Rows
+        whose prompt completes sample their first token from the same call
+        and join the decode batch; the rest resume next step, interleaved
+        with decode (bounded TTFT impact on running requests)."""
+        rows = list(self.prefilling)
+        if not rows:
+            return 0, []
+        b = len(rows)
+        padded_b = _bucket(b, 1, self.max_batch)
+        chunk_lens = [min(self.prefill_chunk, len(r.prompt) - r.prefill_pos)
+                      for r in rows]
+        lo = min(self.min_prefill_bucket, self.prefill_chunk)
+        padded_c = _bucket(max(chunk_lens), lo, self.prefill_chunk)
+        toks = np.zeros((padded_b, padded_c), np.int32)
+        start = np.zeros((padded_b,), np.int32)
+        num_new = np.zeros((padded_b,), np.int32)
+        temps = np.zeros((padded_b,), np.float32)
+        topks = np.zeros((padded_b,), np.int32)
+        topps = np.ones((padded_b,), np.float32)
+        bs = self.kv.block_size
+        for i, r in enumerate(rows):
+            c = chunk_lens[i]
+            s0 = r.prefill_pos
+            # copy-on-write: a block this chunk writes into may be shared
+            # with another live request (fully cached block-aligned prompt
+            # recomputing its last position) — give this row a private copy
+            for bi in range(s0 // bs, (s0 + c - 1) // bs + 1):
+                self.kv.ensure_writable(r.rid, bi)
+            if r.cow_spare:
+                # the COW (or the certainty it is not needed) just resolved:
+                # release the admission-time spare either way — if a copy
+                # happened, the spare paid for the block it consumed
+                r.reserved_blocks -= r.cow_spare
+                self._reserved -= r.cow_spare
+                r.cow_spare = 0
+            toks[i, :c] = r.prompt[s0:s0 + c]
+            start[i] = s0
+            num_new[i] = c
+            temps[i] = r.sampling.temperature
+            topks[i] = r.sampling.top_k
+            topps[i] = r.sampling.top_p
+        # table_array AFTER ensure_writable: COW swaps table entries
+        bt = self.kv.table_array([r.rid for r in rows], padded_b,
+                                 self.table_width)
+        all_greedy = all(r.sampling.greedy for r in rows)
+        keys = jnp.zeros((padded_b, 2), jnp.uint32)
+        if not all_greedy:
+            base = jnp.stack([r.base_key for r in rows])
+            keys = keys.at[:b].set(sampling_mod.batch_keys(
+                base, jnp.zeros((b,), jnp.int32)))
+        fn = self._jit_prefill(padded_b, padded_c, all_greedy)
         tok, logits, self.kv.pools = fn(
             self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(toks),
-            jnp.asarray([p], np.int32), keys,
-            jnp.asarray([req.sampling.temperature], np.float32),
-            jnp.asarray([req.sampling.top_k], np.int32),
-            jnp.asarray([req.sampling.top_p], np.float32))
-        if req.logits_trace is not None:
-            req.logits_trace.append(np.asarray(logits[0], np.float32))
-        return req.append(int(np.asarray(tok)[0]))
+            jnp.asarray(start), jnp.asarray(num_new), keys,
+            jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps))
+        tok = np.asarray(tok)
+        finished = []
+        for i, r in enumerate(rows):
+            r.prefill_pos += chunk_lens[i]
+            if r.prefill_pos < len(r.prompt):
+                continue                              # more chunks to go
+            if self.prefix_cache:
+                self.kv.register_prefix(r.rid, r.prompt)
+            if r.logits_trace is not None:
+                r.logits_trace.append(np.asarray(logits[i], np.float32))
+            self.prefilling = [x for x in self.prefilling if x.rid != r.rid]
+            r.status = RUNNING
+            self.running.append(r)
+            reason = r.append(int(tok[i]))
+            if reason:
+                finished.append(self._finish(r, reason))
+        computed = sum(chunk_lens)
+        self.prefill_tokens_total += computed
+        return computed, finished

@@ -1,4 +1,4 @@
-"""Block-paged KV-cache pool with free-list allocation.
+"""Block-paged KV-cache pool with free-list allocation and prefix caching.
 
 Replaces the monolithic per-call ``lm.init_cache`` allocation for serving:
 one device-resident pool of fixed-size blocks is shared by all in-flight
@@ -10,14 +10,29 @@ Block 0 is the reserved *null block*: padded batch rows and padded prompt
 positions scatter their (discarded) K/V writes there, so every jitted step
 has fully static shapes. The null block never appears in a live block table.
 
-Allocation bookkeeping is host-side (plain Python free list); only the pool
-tensors live on device. The jitted model steps take the pool pytree
-functionally (donated) and the engine swaps ``self.pools`` for the returned
-buffers each step.
+Prefix caching (vLLM-style automatic prefix reuse): every block carries a
+reference count, and *full* prompt blocks are registered in a content-hash
+index keyed by the chained digest of the tokens they hold (so a match on
+block ``i`` implies blocks ``0..i-1`` matched too — the KV values of a block
+depend on its whole prefix). A new request's admission matches the longest
+cached block-aligned prefix and shares those blocks (incref) instead of
+recomputing them. ``free()`` is a decref: blocks whose count reaches zero
+return to the free list, except registered (hash-indexed) blocks, which park
+in an LRU of evictable cached blocks — still matchable, reclaimed oldest
+first when the free list runs dry. Shared blocks are read-only; a writer
+must ``ensure_writable`` first, which copies the block on demand
+(copy-on-write) so divergent suffixes can never corrupt a shared prefix.
+
+Allocation bookkeeping is host-side (plain Python); only the pool tensors
+live on device. The jitted model steps take the pool pytree functionally
+(donated) and the engine swaps ``self.pools`` for the returned buffers each
+step. COW copies are the one device-side operation issued from here.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -26,9 +41,12 @@ from repro.models import lm
 
 NULL_BLOCK = 0
 
+_DIGEST_SEED = b"twell-prefix-cache-v1"
+
 
 class PagedKVCache:
-    """Device KV pool + host free-list allocator + per-request block tables."""
+    """Device KV pool + host free-list allocator + per-request block tables
+    + content-hash prefix cache."""
 
     def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int):
         if num_blocks < 2:
@@ -42,59 +60,221 @@ class PagedKVCache:
         # LIFO free list: recently-freed blocks are reused first (locality)
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self._tables: Dict[int, List[int]] = {}
+        self._ref: List[int] = [0] * num_blocks
+        # prefix cache: chained content digest <-> block, plus the LRU of
+        # evictable (refcount-zero but still matchable) registered blocks
+        self._hash_to_block: Dict[bytes, int] = {}
+        self._block_digest: Dict[int, bytes] = {}
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self.cow_count = 0               # copy-on-write events (tests/stats)
+        self.evict_count = 0             # cached blocks reclaimed under pressure
 
     # ---- capacity ----------------------------------------------------------
 
     @property
     def num_free(self) -> int:
+        """Blocks on the free list proper (excludes evictable cached ones)."""
         return len(self._free)
+
+    @property
+    def num_evictable(self) -> int:
+        """Cached (registered, refcount-zero) blocks reclaimable on demand."""
+        return len(self._lru)
+
+    @property
+    def num_available(self) -> int:
+        """Blocks a new allocation could claim: free + evictable cached."""
+        return len(self._free) + len(self._lru)
 
     def blocks_for(self, num_tokens: int) -> int:
         """Blocks needed to hold ``num_tokens`` cache slots."""
         return -(-num_tokens // self.block_size)
 
     def can_allocate(self, n_blocks: int) -> bool:
-        return n_blocks <= self.num_free
+        return n_blocks <= self.num_available
+
+    def ref_count(self, block: int) -> int:
+        return self._ref[block]
+
+    # ---- prefix hashing ----------------------------------------------------
+
+    def block_digests(self, tokens: Sequence[int]) -> List[bytes]:
+        """Chained content digest per *full* block of ``tokens``. Digest ``i``
+        covers tokens ``[0, (i+1) * block_size)`` — matching block ``i``
+        implies the whole prefix matched, which is what makes a cached
+        block's KV values reusable at all."""
+        out: List[bytes] = []
+        d = _DIGEST_SEED
+        bs = self.block_size
+        for i in range(len(tokens) // bs):
+            chunk = np.asarray(tokens[i * bs:(i + 1) * bs], np.int32)
+            d = hashlib.sha256(d + chunk.tobytes()).digest()
+            out.append(d)
+        return out
+
+    def match_prefix(self, tokens: Sequence[int]) -> List[int]:
+        """Block ids of the longest cached block-aligned prefix of ``tokens``
+        (read-only: no refcount or LRU mutation)."""
+        blocks: List[int] = []
+        for d in self.block_digests(tokens):
+            blk = self._hash_to_block.get(d)
+            if blk is None:
+                break
+            blocks.append(blk)
+        return blocks
+
+    def _available_excluding(self, matched: Sequence[int]) -> int:
+        """Blocks claimable for NEW allocation given that ``matched`` blocks
+        will be revived out of the LRU (not evicted) rather than consumed."""
+        return len(self._free) + len(self._lru) \
+            - sum(1 for b in matched if b in self._lru)
+
+    def plan_admission(self, tokens: Sequence[int]) -> Tuple[List[int], int]:
+        """(matched cached blocks, blocks available for *new* allocation)."""
+        matched = self.match_prefix(tokens)
+        return matched, self._available_excluding(matched)
 
     # ---- allocation --------------------------------------------------------
 
+    def _take_block(self) -> int:
+        """Claim one block: free list first, then evict the LRU cached block
+        (dropping its hash-index entry — it is no longer matchable)."""
+        if self._free:
+            return self._free.pop()
+        if self._lru:
+            blk, _ = self._lru.popitem(last=False)        # oldest first
+            digest = self._block_digest.pop(blk)
+            del self._hash_to_block[digest]
+            self.evict_count += 1
+            return blk
+        raise MemoryError("KV pool exhausted (free list and prefix cache "
+                          "both empty)")
+
     def allocate(self, rid: int, n_blocks: int) -> List[int]:
-        """Claim ``n_blocks`` for request ``rid``; raises when exhausted."""
+        """Claim ``n_blocks`` fresh for request ``rid``; raises on exhaustion.
+        (No prefix reuse — see ``allocate_prefix`` for the caching path.)"""
         if rid in self._tables:
             raise ValueError(f"request {rid} already has a block table")
         if not self.can_allocate(n_blocks):
             raise MemoryError(
-                f"KV pool exhausted: want {n_blocks}, free {self.num_free}")
-        blocks = [self._free.pop() for _ in range(n_blocks)]
+                f"KV pool exhausted: want {n_blocks}, "
+                f"available {self.num_available}")
+        blocks = [self._take_block() for _ in range(n_blocks)]
+        for blk in blocks:
+            self._ref[blk] = 1
         self._tables[rid] = blocks
         return list(blocks)
 
+    def allocate_prefix(self, rid: int, tokens: Sequence[int],
+                        n_blocks: int,
+                        matched: Optional[List[int]] = None) -> int:
+        """Build ``rid``'s table from the longest cached prefix plus fresh
+        blocks, ``n_blocks`` total. Matched blocks are shared (incref;
+        revived out of the LRU if evictable), the remainder comes from the
+        free list / LRU eviction. ``matched`` skips re-hashing the prompt
+        when the caller just ran ``plan_admission`` (it must be fresh: no
+        allocation/free may intervene). Returns the number of *cached
+        tokens* (matched blocks x block_size)."""
+        if rid in self._tables:
+            raise ValueError(f"request {rid} already has a block table")
+        if matched is None:
+            matched = self.match_prefix(tokens)
+        avail = self._available_excluding(matched)
+        need = n_blocks - len(matched)
+        if need < 0:
+            raise ValueError(
+                f"n_blocks {n_blocks} < matched prefix {len(matched)}")
+        if need > avail:
+            raise MemoryError(
+                f"KV pool exhausted: want {need} new, available {avail}")
+        table: List[int] = []
+        for blk in matched:
+            if self._ref[blk] == 0:
+                self._lru.pop(blk)                       # revive from LRU
+            self._ref[blk] += 1
+            table.append(blk)
+        for _ in range(need):
+            blk = self._take_block()
+            self._ref[blk] = 1
+            table.append(blk)
+        self._tables[rid] = table
+        return len(matched) * self.block_size
+
+    def register_prefix(self, rid: int, tokens: Sequence[int]) -> int:
+        """Index ``rid``'s full prompt blocks in the prefix cache so later
+        requests can share them. First writer wins: digests already mapped
+        (including to these very blocks, when they were matched at admission)
+        are skipped. Returns the number of newly registered blocks."""
+        table = self._tables[rid]
+        added = 0
+        for i, d in enumerate(self.block_digests(tokens)):
+            blk = table[i]
+            if d in self._hash_to_block or blk in self._block_digest:
+                continue
+            self._hash_to_block[d] = blk
+            self._block_digest[blk] = d
+            added += 1
+        return added
+
     def append_block(self, rid: int) -> int:
         """Grow a request's table by one block (decode crossing a boundary)."""
-        if not self._free:
-            raise MemoryError("KV pool exhausted on append_block")
-        blk = self._free.pop()
+        blk = self._take_block()
+        self._ref[blk] = 1
         self._tables[rid].append(blk)
         return blk
 
+    def ensure_writable(self, rid: int, block_idx: int) -> Optional[int]:
+        """Copy-on-write guard: before writing into table slot ``block_idx``,
+        a block shared with another live request (refcount > 1) is replaced
+        by a private device-side copy; the shared original keeps its cache
+        registration and remaining references. Returns the new block id when
+        a copy happened, else None (sole owner — in-place write is safe)."""
+        tbl = self._tables[rid]
+        blk = tbl[block_idx]
+        if self._ref[blk] <= 1:
+            return None
+        new = self._take_block()
+        self._ref[new] = 1
+        self.pools["kpool"] = self.pools["kpool"].at[:, new].set(
+            self.pools["kpool"][:, blk])
+        self.pools["vpool"] = self.pools["vpool"].at[:, new].set(
+            self.pools["vpool"][:, blk])
+        self._ref[blk] -= 1
+        tbl[block_idx] = new
+        self.cow_count += 1
+        return new
+
+    def _decref(self, blk: int) -> None:
+        self._ref[blk] -= 1
+        assert self._ref[blk] >= 0, f"negative refcount on block {blk}"
+        if self._ref[blk] == 0:
+            if blk in self._block_digest:
+                self._lru[blk] = None                    # evictable, matchable
+                self._lru.move_to_end(blk)
+            else:
+                self._free.append(blk)
+
     def free(self, rid: int) -> None:
-        """Return all of a request's blocks to the free list."""
+        """Release a request's references. Unregistered blocks return to the
+        free list; registered ones park in the evictable LRU (still
+        matchable) once their last reference drops."""
         for blk in self._tables.pop(rid):
-            self._free.append(blk)
+            self._decref(blk)
 
     def truncate(self, rid: int, keep_blocks: int) -> int:
         """Shrink a request's table to its first ``keep_blocks`` blocks,
-        returning the tail blocks to the free list (speculative rollback:
-        rejected draft tokens must leave no block-accounting trace). The
-        freed blocks' contents are never read again — the table tail no
-        longer references them, and reads mask positions >= seq_len.
-        Returns the number of blocks freed."""
+        releasing the tail (speculative rollback: rejected draft tokens must
+        leave no block-accounting trace). Tail blocks are private scratch
+        past the prompt, so a decref sends them straight back to the free
+        list; their contents are never read again — the table tail no longer
+        references them, and reads mask positions >= seq_len.
+        Returns the number of blocks released."""
         if keep_blocks < 1:
             raise ValueError(f"keep_blocks must be >= 1, got {keep_blocks}")
         tbl = self._tables[rid]
         freed = 0
         while len(tbl) > keep_blocks:
-            self._free.append(tbl.pop())
+            self._decref(tbl.pop())
             freed += 1
         return freed
 
@@ -117,10 +297,35 @@ class PagedKVCache:
         return out
 
     def check_invariants(self) -> None:
-        """Debug/test hook: free + owned partition [1, num_blocks)."""
-        owned = [b for tbl in self._tables.values() for b in tbl]
+        """Debug/test hook: the refcount partition of the pool.
+
+        Every block in [1, num_blocks) is exactly one of {free, evictable
+        cached (LRU), live (referenced by >= 1 table)}; refcounts equal the
+        number of table references; the hash index is a bijection onto
+        registered blocks, none of which sit on the free list."""
+        owned: Dict[int, int] = {}
+        for tbl in self._tables.values():
+            for b in tbl:
+                owned[b] = owned.get(b, 0) + 1
         assert NULL_BLOCK not in owned, "null block leaked into a table"
         assert NULL_BLOCK not in self._free, "null block leaked into free list"
-        combined = sorted(owned + self._free)
-        assert combined == list(range(1, self.num_blocks)), \
-            f"free list + tables do not partition the pool: {combined}"
+        assert NULL_BLOCK not in self._lru, "null block leaked into the LRU"
+        free_set, lru_set = set(self._free), set(self._lru)
+        assert len(free_set) == len(self._free), "duplicate free-list entry"
+        assert not free_set & lru_set, "block both free and cached"
+        assert not (free_set | lru_set) & owned.keys(), \
+            "block both free/cached and live"
+        combined = sorted(self._free) + sorted(self._lru) + sorted(owned)
+        assert sorted(combined) == list(range(1, self.num_blocks)), \
+            f"free + LRU + tables do not partition the pool: {sorted(combined)}"
+        for b in range(1, self.num_blocks):
+            assert self._ref[b] == owned.get(b, 0), \
+                f"block {b}: refcount {self._ref[b]} != {owned.get(b, 0)} refs"
+        assert set(self._hash_to_block.values()) == set(self._block_digest), \
+            "hash index and block-digest map disagree"
+        assert len(self._hash_to_block) == len(self._block_digest), \
+            "hash index is not a bijection"
+        for b in self._lru:
+            assert b in self._block_digest, f"LRU block {b} unregistered"
+        assert not free_set & self._block_digest.keys(), \
+            "registered block leaked onto the free list"

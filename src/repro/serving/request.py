@@ -10,6 +10,7 @@ import jax
 from repro.serving.sampling import GREEDY, SamplingParams
 
 WAITING = "waiting"
+PREFILLING = "prefilling"
 RUNNING = "running"
 FINISHED = "finished"
 
@@ -34,6 +35,10 @@ class Request:
     base_key: Optional[jax.Array] = None     # per-request PRNG base key
     logits_trace: Optional[list] = None      # per-token logits (debug mode)
     reserved_blocks: int = 0                 # growth blocks admission promised
+    prefill_pos: int = 0                     # next prompt position to compute
+    cached_prefix_tokens: int = 0            # prompt tokens reused from cache
+    cow_spare: int = 0                       # reserved block for a potential
+    #                                          copy-on-write at prefill time
     spec_drafted: int = 0                    # draft tokens proposed for me
     spec_accepted: int = 0                   # ... of which the verifier kept
     first_token_time: Optional[float] = None
@@ -82,6 +87,7 @@ class RequestOutput:
     finish_time: float
     spec_drafted: int = 0            # speculative tokens drafted for me
     spec_accepted: int = 0           # ... of which the verifier accepted
+    cached_prefix_tokens: int = 0    # prompt tokens served from the prefix cache
     logits: Optional[list] = None    # per-token logits (engine debug mode)
 
     @property
@@ -112,5 +118,6 @@ class RequestOutput:
                    finish_time=req.finish_time or req.arrival_time,
                    spec_drafted=req.spec_drafted,
                    spec_accepted=req.spec_accepted,
+                   cached_prefix_tokens=req.cached_prefix_tokens,
                    logits=(None if req.logits_trace is None
                            else list(req.logits_trace)))

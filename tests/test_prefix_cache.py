@@ -1,0 +1,446 @@
+"""Prefix-cache + chunked-prefill tests: content-hash matching, refcount /
+free-list / LRU invariants under admit-evict-reuse churn, copy-on-write on
+divergent suffixes, chunked-prefill greedy equivalence vs the static
+reference loop, and regressions for the serving-path bugfix sweep
+(last-only prefill head, reservation-aware StepStats, make_draft_pair
+threshold validation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.models import lm
+from repro.serving import (PagedKVCache, SamplingParams, ServingEngine,
+                           make_draft_pair)
+
+BS = 4  # block size used throughout
+
+
+def _cfg():
+    return get_config("paper-0.5b").reduced()
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, n).tolist() for n in lens]
+
+
+def _static_ref(params, cfg, prompt, steps):
+    toks = generate(params, cfg, jnp.asarray([prompt], jnp.int32), steps,
+                    cache_len=len(prompt) + steps + 1)
+    return np.asarray(toks)[0, len(prompt):].tolist()
+
+
+def _drain(engine):
+    outs = {}
+    while engine.has_unfinished():
+        for o in engine.step():
+            outs[o.rid] = o
+    return outs
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = _cfg()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+# --------------------------------------------------------------------------- #
+# hash index + matching (pool level)
+# --------------------------------------------------------------------------- #
+
+def test_block_digests_full_blocks_only(dense_model):
+    _, cfg = dense_model
+    kv = PagedKVCache(cfg, num_blocks=8, block_size=BS)
+    toks = list(range(10))                       # 2 full blocks + 2 leftover
+    ds = kv.block_digests(toks)
+    assert len(ds) == 2
+    # chained: digest i depends on every token before it
+    other = kv.block_digests([99] + toks[1:])
+    assert ds[0] != other[0] and ds[1] != other[1]
+    # same prefix -> same chain
+    assert kv.block_digests(toks[:8] + [7, 7, 7]) == ds
+
+
+def test_match_and_partial_block_prefix(dense_model):
+    _, cfg = dense_model
+    kv = PagedKVCache(cfg, num_blocks=10, block_size=BS)
+    prompt = list(range(11))                     # blocks [0..3],[4..7] full
+    kv.allocate(1, kv.blocks_for(len(prompt)))
+    assert kv.match_prefix(prompt) == []         # nothing registered yet
+    kv.register_prefix(1, prompt)
+    tbl = kv.block_table(1)
+    assert kv.match_prefix(prompt) == tbl[:2]    # both full blocks match
+    # block-aligned prefix of a longer prompt matches too
+    assert kv.match_prefix(prompt[:8] + [77, 78]) == tbl[:2]
+    # partial-block shared prefix (6 tokens) matches only the 1 full block
+    assert kv.match_prefix(prompt[:6] + [50, 51]) == tbl[:1]
+    # divergence inside the first block -> full miss
+    assert kv.match_prefix([42] + prompt[1:]) == []
+    kv.check_invariants()
+
+
+def test_refcounts_shared_alloc_and_decref_to_lru(dense_model):
+    _, cfg = dense_model
+    kv = PagedKVCache(cfg, num_blocks=10, block_size=BS)
+    prompt = list(range(8))
+    kv.allocate(1, 2)
+    kv.register_prefix(1, prompt)
+    shared = kv.block_table(1)
+    hit = kv.allocate_prefix(2, prompt + [9, 9], 3)
+    assert hit == 8                              # both full blocks reused
+    assert kv.block_table(2)[:2] == shared
+    assert kv.ref_count(shared[0]) == 2 and kv.ref_count(shared[1]) == 2
+    kv.check_invariants()
+    kv.free(1)                                   # decref: blocks stay live
+    assert kv.ref_count(shared[0]) == 1
+    assert kv.num_evictable == 0
+    kv.free(2)                                   # last ref -> evictable LRU
+    assert kv.ref_count(shared[0]) == 0
+    assert kv.num_evictable == 2                 # registered blocks parked
+    assert kv.num_free == 9 - 2                  # private suffix block freed
+    assert kv.num_available == 9
+    # still matchable, and a new request revives them out of the LRU
+    assert kv.allocate_prefix(3, prompt, 2) == 8
+    assert kv.num_evictable == 0
+    kv.check_invariants()
+    kv.free(3)
+    kv.check_invariants()
+
+
+def test_lru_eviction_oldest_first_and_exhaustion(dense_model):
+    _, cfg = dense_model
+    kv = PagedKVCache(cfg, num_blocks=5, block_size=BS)   # 4 usable blocks
+    a, b = [10] * BS, [20] * BS
+    kv.allocate(1, 1); kv.register_prefix(1, a); kv.free(1)
+    kv.allocate(2, 1); kv.register_prefix(2, b); kv.free(2)
+    assert kv.num_free == 2 and kv.num_evictable == 2
+    # claiming 3 fresh blocks must evict the OLDEST cached block (a) only
+    kv.allocate(3, 3)
+    assert kv.evict_count == 1
+    assert kv.match_prefix(a) == []              # evicted -> unmatchable
+    assert kv.match_prefix(b) != []              # recent entry survives
+    kv.check_invariants()
+    with pytest.raises(MemoryError):
+        kv.allocate(4, 2)                        # 1 evictable + 0 free < 2
+    kv.free(3)
+    kv.check_invariants()
+
+
+def test_cow_copies_content_and_fixes_refcounts(dense_model):
+    _, cfg = dense_model
+    kv = PagedKVCache(cfg, num_blocks=8, block_size=BS)
+    prompt = list(range(8))
+    kv.allocate(1, 2)
+    kv.register_prefix(1, prompt)
+    shared = kv.block_table(1)[1]
+    kv.pools["kpool"] = kv.pools["kpool"].at[:, shared].set(7.0)
+    kv.allocate_prefix(2, prompt, 2)
+    assert kv.ref_count(shared) == 2
+    new = kv.ensure_writable(2, 1)               # rid 2 wants to write blk 1
+    assert new is not None and new != shared
+    assert kv.cow_count == 1
+    assert kv.ref_count(shared) == 1 and kv.ref_count(new) == 1
+    assert kv.block_table(2)[1] == new
+    assert kv.block_table(1)[1] == shared        # original owner untouched
+    np.testing.assert_array_equal(np.asarray(kv.pools["kpool"][:, new]),
+                                  np.asarray(kv.pools["kpool"][:, shared]))
+    # sole owner: no copy
+    assert kv.ensure_writable(2, 1) is None
+    kv.check_invariants()
+    kv.free(1); kv.free(2)
+    kv.check_invariants()
+
+
+# --------------------------------------------------------------------------- #
+# engine: prefix reuse correctness + savings
+# --------------------------------------------------------------------------- #
+
+def test_engine_prefix_hit_outputs_identical_and_fewer_tokens(dense_model):
+    """Re-serving a prompt must prefill strictly fewer tokens while staying
+    token-identical to an uncached engine and the static loop — block-aligned
+    (full-match) and partial-block prefixes both."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [8, 11], seed=3)     # 8 = block-aligned at BS
+    refs = [_static_ref(params, cfg, p, 5) for p in prompts]
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32)
+    first = engine.generate(prompts, max_tokens=5)
+    assert engine.cached_tokens_total == 0       # cold cache
+    burned = engine.prefill_tokens_total
+    assert burned == sum(len(p) for p in prompts)
+    second = engine.generate(prompts, max_tokens=5)
+    for o, ref in zip(first, refs):
+        assert o.token_ids == ref
+    for o, ref in zip(second, refs):
+        assert o.token_ids == ref
+    # full match recomputes only the last prompt position; 11-token prompt
+    # reuses its 2 full blocks
+    assert second[0].cached_prefix_tokens == 7
+    assert second[1].cached_prefix_tokens == 8
+    assert engine.prefill_tokens_total - burned == (8 - 7) + (11 - 8)
+    assert engine.cached_tokens_total == 7 + 8
+    engine.kv.check_invariants()
+
+
+def test_engine_partial_block_prefix_hit(dense_model):
+    """A prompt sharing only part of a cached block must reuse exactly the
+    full-block-aligned prefix."""
+    params, cfg = dense_model
+    base = _prompts(cfg, [12], seed=5)[0]
+    variant = base[:6] + _prompts(cfg, [6], seed=6)[0]   # diverges mid-blk 2
+    refs = {tuple(p): _static_ref(params, cfg, p, 4) for p in (base, variant)}
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32)
+    a = engine.generate([base], max_tokens=4)[0]
+    b = engine.generate([variant], max_tokens=4)[0]
+    assert a.token_ids == refs[tuple(base)]
+    assert b.token_ids == refs[tuple(variant)]
+    assert b.cached_prefix_tokens == BS          # one full block only
+    engine.kv.check_invariants()
+
+
+def test_engine_cow_on_divergent_suffixes(dense_model):
+    """Two concurrent requests with an identical (cached, block-aligned)
+    prompt share its blocks; the recompute-last-position write triggers a
+    copy-on-write so their divergent generated suffixes stay private, and
+    both outputs match the uncached engine exactly."""
+    params, cfg = dense_model
+    prompt = _prompts(cfg, [8], seed=9)[0]
+    ref = _static_ref(params, cfg, prompt, 6)
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32)
+    engine.generate([prompt], max_tokens=6)      # warm the cache
+    assert engine.kv.cow_count == 0
+    engine.add_request(prompt, max_tokens=6)
+    engine.add_request(prompt, max_tokens=6)
+    outs = _drain(engine)
+    assert len(outs) == 2
+    for o in outs.values():
+        assert o.token_ids == ref
+        assert o.cached_prefix_tokens == 7
+    assert engine.kv.cow_count >= 1
+    engine.kv.check_invariants()
+
+
+def test_full_match_cow_block_budgeted_under_tight_pool(dense_model):
+    """Admission must budget the copy-on-write block a fully-cached
+    block-aligned prompt may need: with zero pool slack the second
+    identical request defers instead of letting ensure_writable steal a
+    block reserved for the first request's decode growth (which would
+    crash mid-step with MemoryError and kill every live request)."""
+    params, cfg = dense_model
+    prompt = _prompts(cfg, [4], seed=47)[0]       # exactly one full block
+    ref = ServingEngine(params, cfg, block_size=BS, num_blocks=4,
+                        max_batch=2, max_seq_len=8,
+                        prefix_cache=False).generate(
+        [prompt], max_tokens=4)[0]
+    # 3 usable blocks: request A consumes 1 prompt block + 1 growth reserve
+    engine = ServingEngine(params, cfg, block_size=BS, num_blocks=4,
+                           max_batch=2, max_seq_len=8)
+    engine.add_request(prompt, max_tokens=4)
+    engine.step()                                 # A prefilled, decoding
+    engine.add_request(prompt, max_tokens=4)      # full hit on A's block
+    outs = _drain(engine)
+    assert len(outs) == 2
+    for o in outs.values():
+        assert o.token_ids == ref.token_ids
+    assert any(s.waiting_after for s in engine.stats), \
+        "second request was never deferred — the pool had slack"
+    engine.kv.check_invariants()
+    assert engine.kv.num_available == engine.kv.num_blocks - 1
+
+
+def test_engine_churn_admit_evict_reuse_invariants(dense_model):
+    """Generations of admit -> evict -> reuse through one engine with the
+    cache active: refcounts and the free/LRU/live partition must hold every
+    cycle, and repeated prompts must keep hitting."""
+    params, cfg = dense_model
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=4,
+                           max_seq_len=32)
+    full = engine.kv.num_blocks - 1
+    prompts = _prompts(cfg, [8, 12, 5, 9], seed=1)
+    for cycle in range(4):
+        outs = engine.generate(prompts, max_tokens=3 + cycle)
+        assert len(outs) == 4
+        assert engine.kv.num_available == full, f"cycle {cycle} leaked"
+        engine.kv.check_invariants()
+        if cycle:
+            assert all(o.cached_prefix_tokens > 0 for o in outs)
+
+
+def test_engine_tight_pool_evicts_cache_instead_of_stalling(dense_model):
+    """Cached blocks must never block admission: under a pool sized for one
+    request the LRU evicts and every output still matches the uncached
+    engine."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [8, 6, 7, 5], seed=11)
+    ref = ServingEngine(params, cfg, block_size=BS, max_batch=4,
+                        max_seq_len=16, prefix_cache=False).generate(
+        prompts, max_tokens=4)
+    tight = ServingEngine(params, cfg, block_size=BS, num_blocks=5,
+                          max_batch=4, max_seq_len=16)
+    outs = tight.generate(prompts, max_tokens=4)
+    for o, r in zip(outs, ref):
+        assert o.token_ids == r.token_ids
+    assert tight.kv.evict_count > 0, "pool never pressured the cache"
+    assert tight.kv.num_available == tight.kv.num_blocks - 1
+    tight.kv.check_invariants()
+
+
+# --------------------------------------------------------------------------- #
+# chunked prefill
+# --------------------------------------------------------------------------- #
+
+def test_chunked_prefill_greedy_equivalence_staggered(dense_model):
+    """Prompts longer than the chunk prefill across several steps,
+    interleaved with decode for already-running requests — outputs must be
+    token-identical to the static reference loop."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [11, 20, 7], seed=17)
+    refs = [_static_ref(params, cfg, p, 5) for p in prompts]
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=4,
+                           max_seq_len=32, prefill_chunk=4,
+                           min_prefill_bucket=4)
+    outs = {}
+    engine.add_request(prompts[0], max_tokens=5)
+    for _ in range(2):
+        for o in engine.step():
+            outs[o.rid] = o
+    for p in prompts[1:]:                        # join mid-flight
+        engine.add_request(p, max_tokens=5)
+    outs.update(_drain(engine))
+    for rid, ref in enumerate(refs):
+        assert outs[rid].token_ids == ref
+    # the 20-token prompt needed ceil(20/4) = 5 chunk steps
+    assert sum(1 for s in engine.stats if s.prefill_tokens) >= 5
+    assert any(s.prefill_tokens and s.decode_batch for s in engine.stats), \
+        "prefill chunks never interleaved with decode"
+    assert any(s.prefilling_after for s in engine.stats), \
+        "no prefill ever spanned a step boundary"
+    engine.kv.check_invariants()
+
+
+def test_chunked_prefill_same_step_admissions_share_one_call(dense_model):
+    """Requests admitted in the same step advance through one batched
+    prefill dispatch (the per-step prefill_tokens covers all of them)."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [6, 9, 5], seed=23)
+    refs = [_static_ref(params, cfg, p, 4) for p in prompts]
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=4,
+                           max_seq_len=32, prefill_chunk=16)
+    for p in prompts:
+        engine.add_request(p, max_tokens=4)
+    engine.step()
+    s = engine.stats[-1]
+    assert s.prefills == 3
+    assert s.prefill_tokens == sum(len(p) for p in prompts)
+    outs = _drain(engine)
+    for rid, ref in enumerate(refs):
+        assert outs[rid].token_ids == ref
+
+
+def test_chunked_prefill_with_prefix_hits(dense_model):
+    """Chunk scheduling composes with cache hits: only the uncached suffix
+    is chunked through, and outputs stay exact."""
+    params, cfg = dense_model
+    sys_prompt = _prompts(cfg, [12], seed=29)[0]
+    tails = _prompts(cfg, [9, 6], seed=31)
+    prompts = [sys_prompt + t for t in tails]
+    refs = [_static_ref(params, cfg, p, 4) for p in prompts]
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=64, prefill_chunk=4,
+                           min_prefill_bucket=4)
+    a = engine.generate([prompts[0]], max_tokens=4)[0]
+    burned = engine.prefill_tokens_total
+    b = engine.generate([prompts[1]], max_tokens=4)[0]
+    assert a.token_ids == refs[0] and b.token_ids == refs[1]
+    assert b.cached_prefix_tokens == 12          # 3 shared full blocks
+    assert engine.prefill_tokens_total - burned == len(prompts[1]) - 12
+    engine.kv.check_invariants()
+
+
+# --------------------------------------------------------------------------- #
+# bugfix regressions
+# --------------------------------------------------------------------------- #
+
+def test_paged_prefill_last_only_matches_full_logits(dense_model):
+    """last_only=True must return exactly the full-logits row at
+    prompt_len - 1, shaped (B, 1, V) — the escape hatch and the fast path
+    agree."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [5, 7], seed=37)
+    padded = np.zeros((2, 8), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, :len(p)] = p
+    plens = jnp.asarray([5, 7], jnp.int32)
+
+    def pools_bt():
+        kv = PagedKVCache(cfg, num_blocks=12, block_size=BS)
+        kv.allocate(0, 3)
+        kv.allocate(1, 3)
+        return kv.pools, jnp.asarray(kv.table_array([0, 1], 2, 4))
+
+    pools, bt = pools_bt()
+    full, _ = lm.paged_prefill(params, pools, bt, jnp.asarray(padded),
+                               plens, cfg)
+    pools, bt = pools_bt()
+    last, _ = lm.paged_prefill(params, pools, bt, jnp.asarray(padded),
+                               plens, cfg, last_only=True)
+    assert full.shape == (2, 8, cfg.padded_vocab)
+    assert last.shape == (2, 1, cfg.padded_vocab)
+    for i, p in enumerate(prompts):
+        np.testing.assert_allclose(np.asarray(last[i, 0], np.float32),
+                                   np.asarray(full[i, len(p) - 1],
+                                              np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_stepstats_free_blocks_net_of_reservations(dense_model):
+    """free_blocks must report ADMISSIBLE capacity (available minus
+    outstanding growth reservations), with the reservation itself exposed —
+    the old gross number hid admission stalls."""
+    params, cfg = dense_model
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32)
+    engine.add_request(_prompts(cfg, [6], seed=41)[0], max_tokens=8)
+    engine.step()
+    s = engine.stats[-1]
+    assert s.reserved_blocks == engine._reserved > 0
+    assert s.free_blocks == engine.kv.num_available - s.reserved_blocks
+    assert s.free_blocks < engine.kv.num_available   # net, not gross
+    _drain(engine)
+    s = engine.stats[-1]
+    assert s.reserved_blocks == 0
+    assert s.free_blocks == engine.kv.num_available
+
+
+def test_make_draft_pair_rejects_threshold_on_non_tile_skip():
+    with pytest.raises(ValueError, match="tile_skip"):
+        make_draft_pair("dense", "dense", 0.3)
+    with pytest.raises(ValueError, match="tile_skip"):
+        make_draft_pair("gather", "gather", 0.1)
+    # threshold 0 is the lossless default: fine everywhere
+    make_draft_pair("dense", "dense", 0.0)
+    pair = make_draft_pair("dense", "tile_skip", 0.25)
+    assert pair.draft.threshold == 0.25
+
+
+def test_prefix_cache_off_engine_never_registers(dense_model):
+    """prefix_cache=False must restore the PR-1 behavior exactly: no hash
+    registrations, no LRU parking, num_free == num_available."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [8, 8], seed=43)
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32, prefix_cache=False)
+    outs = engine.generate([prompts[0], prompts[0]], max_tokens=4)
+    assert all(o.cached_prefix_tokens == 0 for o in outs)
+    assert engine.cached_tokens_total == 0
+    assert engine.kv.num_evictable == 0
+    assert engine.kv.num_free == engine.kv.num_blocks - 1
+    engine.kv.check_invariants()

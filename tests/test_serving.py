@@ -141,7 +141,7 @@ def test_engine_greedy_matches_static_loop(dense_model, backend):
         assert o.finish_reason == "length"
         assert o.ttft >= 0 and o.latency >= o.ttft
     engine.kv.check_invariants()
-    assert engine.kv.num_free == engine.kv.num_blocks - 1   # all blocks freed
+    assert engine.kv.num_available == engine.kv.num_blocks - 1   # all blocks freed
 
 
 def test_engine_decode_logits_match_static_loop(dense_model):
@@ -227,7 +227,7 @@ def test_engine_eos_eviction_frees_blocks(dense_model):
     out = engine.generate([prompt], max_tokens=8, eos_token_id=first)[0]
     assert out.finish_reason == "eos"
     assert out.token_ids == [first]
-    assert engine.kv.num_free == engine.kv.num_blocks - 1
+    assert engine.kv.num_available == engine.kv.num_blocks - 1
     engine.kv.check_invariants()
 
 
@@ -398,7 +398,7 @@ def test_pool_churn_repeated_admit_evict_cycles(dense_model):
         prompts = _prompts(cfg, [5, 9, 7, 12], seed=cycle)
         outs = engine.generate(prompts, max_tokens=4 + cycle)
         assert len(outs) == 4
-        assert engine.kv.num_free == full, f"cycle {cycle} leaked blocks"
+        assert engine.kv.num_available == full, f"cycle {cycle} leaked blocks"
         engine.kv.check_invariants()
 
 
@@ -418,7 +418,7 @@ def test_pool_exhaustion_defers_without_corrupting_live_requests(dense_model):
     assert deferred, "pool never filled — test lost its point"
     for o, r in zip(outs, ref):
         assert o.token_ids == r.token_ids
-    assert tight.kv.num_free == tight.kv.num_blocks - 1
+    assert tight.kv.num_available == tight.kv.num_blocks - 1
     tight.kv.check_invariants()
 
 

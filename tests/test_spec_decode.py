@@ -90,7 +90,7 @@ def test_spec_greedy_token_identical_staggered(dense_model, k):
             engine.add_request(p, max_tokens=7)
         outs = _drain(engine)
         engine.kv.check_invariants()
-        assert engine.kv.num_free == engine.kv.num_blocks - 1
+        assert engine.kv.num_available == engine.kv.num_blocks - 1
         return engine, outs
 
     _, ref = run(None)
@@ -191,7 +191,7 @@ def test_spec_eos_mid_acceptance_discards_tail(dense_model):
     engine, out = run(eos)
     assert out.finish_reason == "eos"
     assert out.token_ids == expect
-    assert engine.kv.num_free == engine.kv.num_blocks - 1
+    assert engine.kv.num_available == engine.kv.num_blocks - 1
     engine.kv.check_invariants()
 
 
@@ -227,7 +227,7 @@ def test_spec_pool_accounting_under_tight_pool(dense_model):
     outs = engine.generate(prompts, max_tokens=4)
     for o, r in zip(outs, ref_outs):
         assert o.token_ids == r.token_ids
-    assert engine.kv.num_free == engine.kv.num_blocks - 1
+    assert engine.kv.num_available == engine.kv.num_blocks - 1
     engine.kv.check_invariants()
 
 
