@@ -13,7 +13,18 @@ it reports the cache hit rate and prefill-token savings and asserts greedy
 outputs are token-identical either way (caching must be invisible except in
 cost).
 
-  PYTHONPATH=src python benchmarks/bench_serving.py --reduced
+Timing is split so TP speedups are attributable: the warmup replay's wall
+time is the compile cost, the measured replay is steady state, and within
+steady state every engine step records wall vs device-sync milliseconds
+(wall - sync = host-side scheduling overhead).
+
+With ``--tp N`` every engine runs under an N-way tensor-parallel mesh
+(params + paged KV pools sharded over the model axis), and a third section
+asserts greedy outputs are token-identical to the unsharded engine — with
+speculative decoding and the prefix cache enabled — before reporting:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python benchmarks/bench_serving.py --reduced --tp 2
 """
 from __future__ import annotations
 
@@ -30,8 +41,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.distributed.sharding import make_serving_mesh
 from repro.models import lm
-from repro.serving import SamplingParams, ServingEngine
+from repro.serving import SamplingParams, ServingEngine, SpecConfig
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -80,18 +92,18 @@ def make_shared_prefix_workload(num_requests: int, vocab: int, seed: int,
 
 def run_backend(params, cfg, backend: str, work, *, block_size: int,
                 max_batch: int, max_seq_len: int, prefix_cache: bool = True,
-                prefill_chunk: int = 64):
+                prefill_chunk: int = 64, mesh=None, spec=None):
     engine = ServingEngine(params, cfg, backend=backend,
                            block_size=block_size, max_batch=max_batch,
                            max_seq_len=max_seq_len,
                            prefix_cache=prefix_cache,
-                           prefill_chunk=prefill_chunk)
+                           prefill_chunk=prefill_chunk, mesh=mesh, spec=spec)
 
     def reset_cache():
         # measured run starts from a cold cache so hit rates reflect sharing
         # WITHIN the workload, not leftovers from warmup
         engine.kv = type(engine.kv)(engine.kv.cfg, engine.kv.num_blocks,
-                                    engine.kv.block_size)
+                                    engine.kv.block_size, mesh=mesh)
         engine.prefill_tokens_total = 0
         engine.cached_tokens_total = 0
         engine.prompt_tokens_total = 0
@@ -111,8 +123,12 @@ def run_backend(params, cfg, backend: str, work, *, block_size: int,
         return outs
 
     # warmup: jit caches are per-engine, so compile every prefill/decode
-    # bucket this workload hits by replaying it once on the SAME engine
+    # bucket this workload hits by replaying it once on the SAME engine.
+    # Its wall time is the compile cost (the steady-state replay re-hits
+    # every cached executable), so the compile/steady split falls out free.
+    t0 = time.perf_counter()
     replay()
+    compile_wall = time.perf_counter() - t0
     engine.stats.clear()
     reset_cache()                 # device pool realloc stays OUTSIDE the timer
     t0 = time.perf_counter()
@@ -122,12 +138,22 @@ def run_backend(params, cfg, backend: str, work, *, block_size: int,
     ttfts = np.array([o.ttft for o in outs.values()])
     comp = [s.decode_batch for s in engine.stats]
     prompt_toks = engine.prompt_tokens_total
+    step_wall = np.array([s.wall_ms for s in engine.stats])
+    step_sync = np.array([s.sync_ms for s in engine.stats])
     return {"backend": backend, "wall": wall, "tokens": total,
             "toks_per_s": total / wall, "ttft_mean_ms": ttfts.mean() * 1e3,
             "ttft_p90_ms": float(np.percentile(ttfts, 90)) * 1e3,
             "steps": len(engine.stats), "composition": comp,
             "free_trace": [s.free_blocks for s in engine.stats],
             "reserved_trace": [s.reserved_blocks for s in engine.stats],
+            "step_wall_ms": step_wall.round(3).tolist(),
+            "step_sync_ms": step_sync.round(3).tolist(),
+            "compile_wall_s": compile_wall,
+            "steady_wall_s": wall,
+            "step_wall_ms_mean": float(step_wall.mean()),
+            "step_wall_ms_p90": float(np.percentile(step_wall, 90)),
+            "step_sync_ms_mean": float(step_sync.mean()),
+            "sync_frac": float(step_sync.sum() / max(step_wall.sum(), 1e-9)),
             "prefix_cache": prefix_cache,
             "prompt_tokens": prompt_toks,
             "prefill_tokens": engine.prefill_tokens_total,
@@ -154,6 +180,10 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=64)
     ap.add_argument("--shared-prefix-requests", type=int, default=6,
                     help="requests in the shared-system-prompt workload")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree (shard params + paged KV "
+                         "pools over a 1-D mesh; needs >= tp devices, e.g. "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.num_requests = 2
@@ -163,6 +193,7 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    mesh = make_serving_mesh(args.tp) if args.tp > 1 else None
     params = lm.init(jax.random.PRNGKey(args.seed), cfg)
     work = make_workload(args.num_requests, cfg.vocab_size, args.seed)
     max_seq_len = max(len(p) + m for _, p, m in work)
@@ -170,14 +201,14 @@ def main(argv=None):
 
     print(f"# bench_serving arch={cfg.name} reduced={args.reduced} "
           f"requests={args.num_requests} block_size={args.block_size} "
-          f"max_batch={args.max_batch}")
+          f"max_batch={args.max_batch} tp={args.tp}")
     print("backend,tok_s,ttft_mean_ms,ttft_p90_ms,steps,total_tokens")
     results = []
     for backend in args.backends.split(","):
         r = run_backend(params, cfg, backend.strip(), work,
                         block_size=args.block_size,
                         max_batch=args.max_batch, max_seq_len=max_seq_len,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk, mesh=mesh)
         results.append(r)
         print(f"{r['backend']},{r['toks_per_s']:.1f},"
               f"{r['ttft_mean_ms']:.1f},{r['ttft_p90_ms']:.1f},"
@@ -187,6 +218,11 @@ def main(argv=None):
         print(f"# {r['backend']} decode-batch per step: {comp}")
         print(f"# {r['backend']} admissible/reserved blocks per step: "
               f"{list(zip(r['free_trace'], r['reserved_trace']))}")
+        print(f"# {r['backend']} compile {r['compile_wall_s']:.2f}s, steady "
+              f"{r['steady_wall_s']:.2f}s; step wall "
+              f"{r['step_wall_ms_mean']:.2f}ms mean / "
+              f"{r['step_wall_ms_p90']:.2f}ms p90, device-sync share "
+              f"{r['sync_frac']:.1%}")
         assert len(set(comp)) > 1, \
             "batch composition never changed — not continuous batching"
     print("# composition varies across steps: continuous batching confirmed")
@@ -202,7 +238,7 @@ def main(argv=None):
         cache_runs[on] = run_backend(
             params, cfg, backend0, shared, block_size=args.block_size,
             max_batch=args.max_batch, max_seq_len=shared_seq,
-            prefix_cache=on, prefill_chunk=args.prefill_chunk)
+            prefix_cache=on, prefill_chunk=args.prefill_chunk, mesh=mesh)
     hit, miss = cache_runs[True], cache_runs[False]
     assert hit["outputs"] == miss["outputs"], \
         "prefix caching changed greedy outputs"
@@ -216,10 +252,39 @@ def main(argv=None):
           f"{miss['prefill_tokens']} -> {hit['prefill_tokens']} "
           f"({savings:.1%} saved), outputs identical")
 
+    # ---- tp identity: sharded == unsharded, spec + prefix cache on --------
+    tp_identity = None
+    if mesh is not None:
+        kwargs = dict(block_size=args.block_size, max_batch=args.max_batch,
+                      max_seq_len=shared_seq, prefix_cache=True,
+                      prefill_chunk=args.prefill_chunk,
+                      spec=SpecConfig(k=2, draft_backend="tile_skip"))
+        tp_run = run_backend(params, cfg, backend0, shared, mesh=mesh,
+                             **kwargs)
+        ref_run = run_backend(params, cfg, backend0, shared, mesh=None,
+                              **kwargs)
+        assert tp_run["outputs"] == ref_run["outputs"], \
+            f"tp={args.tp} engine diverged from the unsharded engine"
+        speedup = ref_run["steady_wall_s"] / tp_run["steady_wall_s"]
+        tp_identity = {
+            "tp": args.tp, "backend": backend0,
+            "spec_k": 2, "prefix_cache": True,
+            "outputs_identical": True,
+            "steady_wall_s_tp": tp_run["steady_wall_s"],
+            "steady_wall_s_tp1": ref_run["steady_wall_s"],
+            "sync_frac_tp": tp_run["sync_frac"],
+        }
+        print(f"# tp={args.tp} identity: greedy outputs token-identical to "
+              f"tp=1 (spec k=2 + prefix cache on, backend={backend0}); "
+              f"steady wall {ref_run['steady_wall_s']:.2f}s -> "
+              f"{tp_run['steady_wall_s']:.2f}s ({speedup:.2f}x on fake "
+              f"host devices — expect >1 only on real accelerators)")
+
     def trim(r):
         return {k: v for k, v in r.items()
                 if k not in ("composition", "outputs", "free_trace",
-                             "reserved_trace")}
+                             "reserved_trace", "step_wall_ms",
+                             "step_sync_ms")}
 
     if args.json_out:
         write_bench_json(args.json_out, {
@@ -229,6 +294,8 @@ def main(argv=None):
             "block_size": args.block_size, "max_batch": args.max_batch,
             "prefill_chunk": args.prefill_chunk,
             "smoke": args.smoke,
+            "tp": args.tp,
+            "tp_identity": tp_identity,
             "results": [trim(r) for r in results],
             "shared_prefix": {
                 "num_requests": args.shared_prefix_requests,

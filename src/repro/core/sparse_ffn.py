@@ -78,11 +78,16 @@ def _aux_from_packed(vals: jax.Array, idx: jax.Array, row_nnz: jax.Array,
 # --------------------------------------------------------------------------- #
 
 def _dense_apply(params, x, scfg: SparsityConfig, gated: bool):
+    from repro.distributed.sharding import shard_act
     act = activation(scfg.activation if scfg.enabled else "silu")
     if gated:
         h = (x @ params["wu"]) * act(x @ params["wg"])
     else:
         h = act(x @ params["wu"])
+    # Megatron layout: the hidden dim splits over the model axis, matching
+    # wu's column / wd's row sharding — shard-local up+down projections with
+    # one all-reduce on y. No-op without a mesh (single-device serving/tests).
+    h = shard_act(h, *([None] * (h.ndim - 1) + ["model"]))
     y = h @ params["wd"]
     return y, _aux_from_h(h)
 

@@ -21,6 +21,7 @@ import re
 from typing import Any, Dict, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -136,11 +137,22 @@ def named(mesh: Mesh, spec_tree: Any) -> Any:
 def cache_spec(path: str, shape: Tuple[int, ...], cfg, mesh: Mesh) -> P:
     """KV / SSM caches. Layout conventions (leading layer-stack dim):
     k,v: (L, B, S, Hkv, hd); state: (L, B, H, hd, N); conv: (L, B, W, C);
-    wkv: (L, B, H, hd, hd); shift: (L, B, D); xk/xv: (L, B, P, Hkv, hd)."""
+    wkv: (L, B, H, hd, hd); shift: (L, B, D); xk/xv: (L, B, P, Hkv, hd);
+    paged serving pools kpool/vpool: (L, NB, BS, Hkv, hd)."""
     tp = tp_size(mesh)
     dsz = data_size(mesh)
     dp = dp_spec(mesh)
     spec: list = [None] * len(shape)
+    if re.search(r"(^|/)[kv]pool$", path) and len(shape) == 5:
+        # paged pool: ONLY the kv-head axis may split. Dim 1 is the physical
+        # block id — allocation is a host-side free list and any block can
+        # belong to any request, so the block axis must stay whole on every
+        # device (a block-sharded pool would turn each table gather into a
+        # cross-device shuffle). Seq-dim fallback is likewise unavailable:
+        # dim 2 is the *intra-block* offset, not a sequence.
+        if cfg.num_kv_heads % tp == 0:
+            spec[3] = "model"
+        return P(*spec)
     if len(shape) >= 2 and shape[1] % max(dsz, 1) == 0 and dsz > 1:
         spec[1] = dp                                        # batch over data(+pod)
     if re.search(r"(^|/)(k|v|xk|xv)$", path) and len(shape) == 5:
@@ -168,11 +180,21 @@ def make_cache_specs(cache_shapes: Any, cfg, mesh: Mesh) -> Any:
 # --------------------------------------------------------------------------- #
 
 def current_mesh():
-    """The ambient mesh, or None. jax>=0.5 exposes get_abstract_mesh();
-    older releases only have the thread-local physical mesh."""
+    """The ambient mesh, or None — ONE resolution path for every caller
+    (training, serving, tests) on every supported jax release.
+
+    Resolution order: the explicit abstract mesh when one is actually set
+    (jax >= 0.5 ``use_mesh``/``set_mesh``), then the thread-local physical
+    mesh that ``with mesh:`` establishes on all releases. The old shim
+    version-forked on the *presence* of ``get_abstract_mesh`` and returned
+    its result unconditionally, so on jax >= 0.5 a ``with mesh:`` context
+    (what 0.4.37 callers — and the serving engine — use) resolved to the
+    empty abstract mesh instead of falling through."""
     get = getattr(jax.sharding, "get_abstract_mesh", None)
     if get is not None:
-        return get()
+        m = get()
+        if m is not None and getattr(m, "axis_names", ()):
+            return m
     from jax.interpreters import pxla
     m = pxla.thread_resources.env.physical_mesh
     return None if m.empty else m
@@ -202,6 +224,62 @@ def shard_act(x: jax.Array, *spec) -> jax.Array:
     if all(c is None for c in clean):
         return x
     return jax.lax.with_sharding_constraint(x, P(*clean))
+
+
+# --------------------------------------------------------------------------- #
+# serving (tensor-parallel engine)
+# --------------------------------------------------------------------------- #
+
+def make_serving_mesh(tp: int):
+    """A 1-D tensor-parallel mesh over the first ``tp`` local devices.
+
+    The serving engine has no data axis: the continuous batch is scheduled
+    host-side and every device sees every request, so the only mesh axis is
+    ``model`` (attention heads / FFN hidden / vocab / KV-head pool axis)."""
+    devices = jax.devices()
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if tp > len(devices):
+        raise ValueError(
+            f"tp={tp} exceeds the {len(devices)} visible devices "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"for CPU testing)")
+    return Mesh(np.asarray(devices[:tp]), ("model",))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated NamedSharding — host-controlled serving state (block
+    tables, seq lens, sampled tokens, sampling knobs) stays whole on every
+    device so the scheduler never pays a layout shuffle for it."""
+    return NamedSharding(mesh, P())
+
+
+def make_paged_pool_shardings(cfg, mesh: Mesh, num_blocks: int,
+                              block_size: int):
+    """NamedShardings for the serving engine's paged KV pools, via the same
+    ``cache_spec`` rules the training/decode caches use (kpool/vpool split
+    the kv-head axis over ``model``; the block axis stays whole)."""
+    shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads,
+             cfg.resolved_head_dim)
+    return {name: NamedSharding(mesh, cache_spec(name, shape, cfg, mesh))
+            for name in ("kpool", "vpool")}
+
+
+def serving_jit_shardings(mesh: Mesh, param_shardings, pool_shardings,
+                          n_host_args: int, n_rep_outs: int) -> Dict:
+    """``jax.jit`` sharding kwargs for a serving entrypoint of the canonical
+    shape ``fn(params, pools, *host_args) -> (*rep_outs, pools)``.
+
+    Params keep their TP layout, pools keep theirs (donation-compatible:
+    identical in/out sharding), and everything else — block tables, seq
+    lens, tokens, PRNG keys, sampling knobs in; sampled tokens / logits
+    out — is replicated, so the only per-step host transfer is the sampled
+    token row the engine actually reads back."""
+    rep = replicated(mesh)
+    return dict(
+        in_shardings=(param_shardings, pool_shardings)
+        + (rep,) * n_host_args,
+        out_shardings=(rep,) * n_rep_outs + (pool_shardings,))
 
 
 def batch_spec(ndim: int, mesh: Mesh, batch_size: int = 0) -> P:

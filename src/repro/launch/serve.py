@@ -103,6 +103,14 @@ def main(argv=None):
     ap.add_argument("--draft-threshold", type=float, default=0.0,
                     help="tile-skip gate threshold for the draft pass "
                          "(higher = sparser/cheaper draft, lower acceptance)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard params + paged KV "
+                         "pools over a 1-D device mesh (1 = unsharded; "
+                         "CPU testing: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="run the mesh-sharded engine path even at --tp 1 "
+                         "(exercises the sharded code path on one device)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--static", action="store_true",
                     help="use the fixed-shape reference loop instead of the "
@@ -126,6 +134,9 @@ def main(argv=None):
 
     use_engine = cfg.family in ("dense", "moe") and not cfg.window \
         and not cfg.attn_chunk and not args.static
+    if (args.tp > 1 or args.mesh) and not use_engine:
+        raise SystemExit("--tp/--mesh require the continuous-batching "
+                         "engine (dense/moe family, no --static)")
     if not use_engine:
         t0 = time.time()
         toks = generate(params, cfg, prompt, args.gen,
@@ -140,17 +151,23 @@ def main(argv=None):
         print(np.asarray(toks[:, :16]))
         return toks
 
+    from repro.distributed.sharding import make_serving_mesh
     from repro.serving import SamplingParams, ServingEngine, SpecConfig
     spec = None
     if args.spec_k:
         spec = SpecConfig(k=args.spec_k, draft_backend=args.draft_backend,
                           draft_threshold=args.draft_threshold)
+    mesh = None
+    if args.tp > 1 or args.mesh:
+        mesh = make_serving_mesh(args.tp)
+        print(f"[serve/engine] tensor-parallel mesh: tp={args.tp} over "
+              f"{[str(d) for d in mesh.devices.flat]}")
     engine = ServingEngine(
         params, cfg, backend=args.ffn_impl, block_size=args.block_size,
         max_batch=args.max_batch or args.batch,
         max_seq_len=args.prompt_len + args.gen, seed=args.seed, spec=spec,
         prefix_cache=not args.no_prefix_cache,
-        prefill_chunk=args.prefill_chunk)
+        prefill_chunk=args.prefill_chunk, mesh=mesh)
     # no per-request seed: each request derives its own key from the engine
     # master key (identical prompts must not produce identical samples)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,

@@ -13,6 +13,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import shard_act
+
 INIT_STD = 0.02
 
 
@@ -222,6 +224,13 @@ def _paged_attention(q, k, v, cache, n_heads, scale):
     bt, sl = cache["block_tables"], cache["seq_lens"]
     b, s, hkv, hd = k.shape
     bs_blk = kpool.shape[1]
+    # tensor-parallel serving: per-head tensors split over the model axis,
+    # matching the pool's kv-head sharding, so scatter/gather and the SDPA
+    # run shard-local and only the wo projection all-reduces. No-ops (and
+    # bit-identical) without a mesh or when heads don't divide.
+    q = shard_act(q, None, None, "model", None)
+    k = shard_act(k, None, None, "model", None)
+    v = shard_act(v, None, None, "model", None)
     if s == 1:                                     # decode: one token per row
         blk = jnp.take_along_axis(bt, (sl // bs_blk)[:, None], axis=1)[:, 0]
         off = sl % bs_blk
@@ -231,11 +240,14 @@ def _paged_attention(q, k, v, cache, n_heads, scale):
             off = jnp.where(wv, off, 0)
         kpool = kpool.at[blk, off].set(k[:, 0])
         vpool = vpool.at[blk, off].set(v[:, 0])
-        kf = repeat_kv(kpool[bt].reshape(b, -1, hkv, hd), n_heads)
-        vf = repeat_kv(vpool[bt].reshape(b, -1, hkv, hd), n_heads)
+        kf = shard_act(repeat_kv(kpool[bt].reshape(b, -1, hkv, hd), n_heads),
+                       None, None, "model", None)
+        vf = shard_act(repeat_kv(vpool[bt].reshape(b, -1, hkv, hd), n_heads),
+                       None, None, "model", None)
         kpos = jnp.arange(kf.shape[1])
         mask = (kpos[None, :] <= sl[:, None])[:, None, None, :]
-        out = _sdpa(q, kf, vf, mask, scale)
+        out = shard_act(_sdpa(q, kf, vf, mask, scale),
+                        None, None, "model", None)
     else:                                          # chunk-append w/ history
         idx = jnp.arange(s)
         valid = idx[None, :] < cache["num_new"][:, None]           # (B, S)
@@ -247,11 +259,14 @@ def _paged_attention(q, k, v, cache, n_heads, scale):
             k.reshape(b * s, hkv, hd))
         vpool = vpool.at[blk.reshape(-1), off.reshape(-1)].set(
             v.reshape(b * s, hkv, hd))
-        kf = repeat_kv(kpool[bt].reshape(b, -1, hkv, hd), n_heads)
-        vf = repeat_kv(vpool[bt].reshape(b, -1, hkv, hd), n_heads)
+        kf = shard_act(repeat_kv(kpool[bt].reshape(b, -1, hkv, hd), n_heads),
+                       None, None, "model", None)
+        vf = shard_act(repeat_kv(vpool[bt].reshape(b, -1, hkv, hd), n_heads),
+                       None, None, "model", None)
         kpos = jnp.arange(kf.shape[1])
         mask = (kpos[None, None, :] <= pos[:, :, None])[:, None]
-        out = _sdpa(q, kf, vf, mask, scale)
+        out = shard_act(_sdpa(q, kf, vf, mask, scale),
+                        None, None, "model", None)
     out_cache = dict(cache)
     out_cache.update(kpool=kpool, vpool=vpool)
     return out, out_cache

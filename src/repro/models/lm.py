@@ -494,7 +494,11 @@ def _paged_scan(params, x, pools, cfg, positions, block_tables, seq_lens,
         x = jnp.take_along_axis(x, last_rows[:, None, None], axis=1)
     x = norm_apply(cfg.norm, params["final_ln"], x)
     head = params["embed"] if cfg.tied_embeddings else params["lm_head"]
-    return lm_logits(x, head), {"kpool": kps, "vpool": vps}
+    # vocab-sharded logits (head rows split over model); the engine's argmax
+    # / sampler reduces them device-side — only the winning token row ever
+    # crosses back to host
+    logits = shard_act(lm_logits(x, head), None, None, "model")
+    return logits, {"kpool": kps, "vpool": vps}
 
 
 def paged_prefill(params: Dict, pools: Dict, block_tables: jax.Array,

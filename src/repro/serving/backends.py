@@ -43,6 +43,34 @@ class ServingBackend(ABC):
         return (f"{self.name}: prefill={self.ffn_impl(PREFILL)} "
                 f"decode={self.ffn_impl(DECODE)}")
 
+    def validate_mesh(self, cfg: ModelConfig, mesh) -> None:
+        """Reject model/mesh combinations tensor-parallel serving cannot
+        shard. Every backend routes attention through the paged KV pool,
+        whose only shardable axis is the kv-head dim, and projects through
+        head-sharded wq/wo — so non-divisible head counts would silently
+        replicate the very tensors TP exists to split. Fail loudly instead
+        (the training path keeps its graceful fallbacks; serving opts into
+        strictness because the operator asked for tp>1 on purpose)."""
+        from repro.distributed.sharding import tp_size
+        tp = tp_size(mesh)
+        if tp <= 1:
+            return
+        problems = []
+        if cfg.num_kv_heads % tp:
+            problems.append(f"num_kv_heads={cfg.num_kv_heads} (paged KV "
+                            f"pool head axis)")
+        if cfg.num_heads % tp:
+            problems.append(f"num_heads={cfg.num_heads} (attention TP)")
+        if cfg.d_ff % tp:
+            problems.append(f"d_ff={cfg.d_ff} (FFN TP)")
+        if cfg.padded_vocab % tp:
+            problems.append(f"padded_vocab={cfg.padded_vocab} "
+                            f"(vocab-sharded logits)")
+        if problems:
+            raise ValueError(
+                f"backend {self.name!r} cannot serve under tp={tp}: "
+                + "; ".join(problems) + " not divisible by the model axis")
+
 
 class DenseBackend(ServingBackend):
     """Paper baseline: dense FFN math everywhere."""

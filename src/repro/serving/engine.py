@@ -29,9 +29,21 @@ One ``step()`` is one engine iteration:
 The FFN execution path per phase (dense | gather/TwELL | tile_skip) comes
 from the ``ServingBackend``, so sparse-vs-dense serving is one constructor
 flag.
+
+Tensor parallelism is one more flag: ``ServingEngine(..., mesh=mesh)`` runs
+every jitted entrypoint (decode, chunked prefill, the speculative drafter's
+scan, the verifier) under a ``jax.sharding.Mesh`` with explicit
+in/out_shardings — params and the paged KV pools split over the ``model``
+axis (attention heads / FFN hidden / vocab / kv-head pool axis), while the
+scheduler's state (block tables, seq lens, tokens, sampling knobs) stays
+replicated. Scheduling, admission, prefix caching, and rollback are
+host-side and layout-agnostic, so the engine is byte-for-byte the same
+code path sharded or not; the only per-step host transfer either way is
+the sampled-token row.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
@@ -43,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.distributed import sharding
 from repro.models import lm
 from repro.serving import sampling as sampling_mod
 from repro.serving.backends import (DECODE, PREFILL, get_backend,
@@ -76,6 +89,10 @@ class StepStats:
     spec_batch: int = 0      # rows that ran draft->verify this step
     spec_drafted: int = 0    # draft tokens proposed this step
     spec_accepted: int = 0   # ... of which the verifier accepted
+    wall_ms: float = 0.0     # host wall-clock for the whole step
+    sync_ms: float = 0.0     # ... of which spent blocked on device results
+    #                          (dispatch+compute sync; wall - sync = host-side
+    #                          scheduling, so TP speedups are attributable)
 
 
 def _bucket(n: int, lo: int, hi: int) -> int:
@@ -95,12 +112,21 @@ class ServingEngine:
                  min_prefill_bucket: int = 16, seed: int = 0,
                  record_logits: bool = False,
                  spec: Optional[SpecConfig] = None,
-                 prefix_cache: bool = True, prefill_chunk: int = 64):
+                 prefix_cache: bool = True, prefill_chunk: int = 64,
+                 mesh=None):
         self.backend = get_backend(backend)
-        self.params = params
         self.cfg = cfg
         self.cfg_prefill = self.backend.configure(cfg, PREFILL)
         self.cfg_decode = self.backend.configure(cfg, DECODE)
+        self.mesh = mesh
+        self._param_shardings = None
+        if mesh is not None:
+            self.backend.validate_mesh(cfg, mesh)
+            pspecs = sharding.make_param_specs(
+                jax.eval_shape(lambda: params), cfg, mesh, fsdp=False)
+            self._param_shardings = sharding.named(mesh, pspecs)
+            params = jax.device_put(params, self._param_shardings)
+        self.params = params
         self.spec = spec
         if spec is not None:
             spec.validate()
@@ -125,7 +151,15 @@ class ServingEngine:
         if num_blocks is None:
             # enough for a full batch of worst-case requests, + null block
             num_blocks = 1 + max_batch * (-(-max_seq_len // block_size))
-        self.kv = PagedKVCache(cfg, num_blocks, block_size)
+        self.kv = PagedKVCache(cfg, num_blocks, block_size, mesh=mesh)
+        if mesh is not None and spec is not None:
+            # drafter: (bt, sl0, tok0, draft_len, keys, temps, topks, topps)
+            # -> (toks, logits, pools); verifier: (bt, start, num_new, toks)
+            # -> (logits, pools)
+            self.drafter.jit_shardings = sharding.serving_jit_shardings(
+                mesh, self._param_shardings, self.kv.pool_shardings, 8, 2)
+            self.verifier.jit_shardings = sharding.serving_jit_shardings(
+                mesh, self._param_shardings, self.kv.pool_shardings, 4, 1)
         self.table_width = -(-max_seq_len // block_size)
         self.waiting: Deque[Request] = deque()
         self.prefilling: List[Request] = []
@@ -138,8 +172,31 @@ class ServingEngine:
         self._next_rid = 0
         self._step_idx = 0
         self._reserved = 0            # growth blocks promised to running reqs
+        self._sync_s = 0.0            # device-sync seconds within this step
         self._decode_fns: Dict[int, callable] = {}
         self._prefill_fns: Dict[int, callable] = {}
+
+    def _mesh_ctx(self):
+        """Ambient-mesh context for tracing/dispatching jitted serving calls
+        (``shard_act`` resolves the mesh thread-locally); a no-op unsharded."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def _jit_kwargs(self, n_host_args: int, n_rep_outs: int) -> Dict:
+        """Explicit in/out_shardings for a serving entrypoint (empty dict
+        when unsharded — plain jit, exactly the pre-mesh behavior)."""
+        if self.mesh is None:
+            return {}
+        return sharding.serving_jit_shardings(
+            self.mesh, self._param_shardings, self.kv.pool_shardings,
+            n_host_args, n_rep_outs)
+
+    def _sync(self, *outputs) -> None:
+        """Block on device outputs, attributing the wait to this step's
+        ``sync_ms`` (everything outside it is host-side scheduling)."""
+        t0 = time.perf_counter()
+        for o in outputs:
+            jax.block_until_ready(o)
+        self._sync_s += time.perf_counter() - t0
 
     # ------------------------------------------------------------------ API
 
@@ -181,6 +238,8 @@ class ServingEngine:
         rest), admit waiting requests (prefix-cache-aware), then advance
         every in-flight prefill by one chunk through a single batched call.
         Returns the requests that finished."""
+        t_step = time.perf_counter()
+        self._sync_s = 0.0
         finished: List[RequestOutput] = []
         decode_batch = padded = 0
         spec_batch = drafted = accepted = 0
@@ -208,7 +267,9 @@ class ServingEngine:
             prefilling_after=len(self.prefilling),
             prefill_tokens=pf_tokens, cached_prefix_tokens=cached_toks,
             spec_batch=spec_batch,
-            spec_drafted=drafted, spec_accepted=accepted))
+            spec_drafted=drafted, spec_accepted=accepted,
+            wall_ms=(time.perf_counter() - t_step) * 1e3,
+            sync_ms=self._sync_s * 1e3))
         return finished
 
     def generate(self, prompts: Sequence[Sequence[int]], *,
@@ -230,7 +291,9 @@ class ServingEngine:
         if (padded_batch, greedy) not in self._decode_fns:
             cfg = self.cfg_decode
 
-            @functools.partial(jax.jit, donate_argnums=(1,))
+            # (bt, sl, toks, keys, temps, topks, topps) in; (tok, last) out
+            @functools.partial(jax.jit, donate_argnums=(1,),
+                               **self._jit_kwargs(7, 2))
             def fn(params, pools, bt, sl, toks, keys, temps, topks, topps):
                 logits, pools = lm.paged_decode_step(params, pools, bt, sl,
                                                      toks, cfg)
@@ -250,7 +313,10 @@ class ServingEngine:
         if key not in self._prefill_fns:
             cfg = self.cfg_prefill
 
-            @functools.partial(jax.jit, donate_argnums=(1,))
+            # (bt, toks, start, num_new, keys, temps, topks, topps) in;
+            # (tok, last) out
+            @functools.partial(jax.jit, donate_argnums=(1,),
+                               **self._jit_kwargs(8, 2))
             def fn(params, pools, bt, toks, start, num_new, keys, temps,
                    topks, topps):
                 # last_only: the head runs on each row's final valid hidden
@@ -316,11 +382,13 @@ class ServingEngine:
             pos = jnp.asarray([len(r.output_tokens) for r in batch],
                               jnp.int32)
             keys = keys.at[:b].set(sampling_mod.batch_keys(base, pos))
-        fn = self._jit_decode(padded, all_greedy)
-        next_toks, logits, self.kv.pools = fn(
-            self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl),
-            jnp.asarray(toks), keys, jnp.asarray(temps), jnp.asarray(topks),
-            jnp.asarray(topps))
+        with self._mesh_ctx():
+            fn = self._jit_decode(padded, all_greedy)
+            next_toks, logits, self.kv.pools = fn(
+                self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl),
+                jnp.asarray(toks), keys, jnp.asarray(temps),
+                jnp.asarray(topks), jnp.asarray(topps))
+        self._sync(next_toks)
         next_toks = np.asarray(next_toks)
         finished = []
         for i, r in enumerate(batch):
@@ -379,18 +447,23 @@ class ServingEngine:
                 sampling_mod.spec_batch_keys(base, pos + j,
                                              sampling_mod.STREAM_DRAFT)
                 for j in range(k)]))
-        d_toks, d_logits, self.kv.pools = self.drafter.draft(
-            self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl0),
-            jnp.asarray(tok0), jnp.asarray(dlen), keys, jnp.asarray(temps),
-            jnp.asarray(topks), jnp.asarray(topps), greedy=all_greedy)
+        with self._mesh_ctx():
+            d_toks, d_logits, self.kv.pools = self.drafter.draft(
+                self.params, self.kv.pools, jnp.asarray(bt),
+                jnp.asarray(sl0), jnp.asarray(tok0), jnp.asarray(dlen), keys,
+                jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps),
+                greedy=all_greedy)
+        self._sync(d_toks)
         d_toks = np.asarray(d_toks)
         verify_toks = np.zeros((padded, k + 1), np.int32)
         verify_toks[:, 0] = tok0[:, 0]
         verify_toks[:, 1:] = d_toks
         num_new = dlen + (dlen > 0)            # k_eff + 1; 0 for padded rows
-        t_logits, self.kv.pools = self.verifier.verify(
-            self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl0),
-            jnp.asarray(num_new), jnp.asarray(verify_toks))
+        with self._mesh_ctx():
+            t_logits, self.kv.pools = self.verifier.verify(
+                self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl0),
+                jnp.asarray(num_new), jnp.asarray(verify_toks))
+        self._sync(t_logits)
         t_logits = np.asarray(t_logits)
         d_logits_np = None if all_greedy else np.asarray(d_logits)
         finished = []
@@ -524,11 +597,14 @@ class ServingEngine:
             base = jnp.stack([r.base_key for r in rows])
             keys = keys.at[:b].set(sampling_mod.batch_keys(
                 base, jnp.zeros((b,), jnp.int32)))
-        fn = self._jit_prefill(padded_b, padded_c, all_greedy)
-        tok, logits, self.kv.pools = fn(
-            self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(toks),
-            jnp.asarray(start), jnp.asarray(num_new), keys,
-            jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps))
+        with self._mesh_ctx():
+            fn = self._jit_prefill(padded_b, padded_c, all_greedy)
+            tok, logits, self.kv.pools = fn(
+                self.params, self.kv.pools, jnp.asarray(bt),
+                jnp.asarray(toks), jnp.asarray(start), jnp.asarray(num_new),
+                keys, jnp.asarray(temps), jnp.asarray(topks),
+                jnp.asarray(topps))
+        self._sync(tok)
         tok = np.asarray(tok)
         finished = []
         for i, r in enumerate(rows):

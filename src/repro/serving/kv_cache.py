@@ -27,16 +27,31 @@ Allocation bookkeeping is host-side (plain Python); only the pool tensors
 live on device. The jitted model steps take the pool pytree functionally
 (donated) and the engine swaps ``self.pools`` for the returned buffers each
 step. COW copies are the one device-side operation issued from here.
+
+Tensor parallelism: pass ``mesh`` to shard the pools along the kv-head axis
+(``distributed.sharding.cache_spec`` rules — the block axis always stays
+whole on every device, because block ids are assigned by this host-side
+allocator and any block can belong to any request). All bookkeeping —
+tables, refcounts, the hash index, the LRU — is physical-layout-agnostic:
+a block id means the same thing on every shard. The COW copy is a jitted
+donating call with explicit out_shardings, so it moves only the local shard
+of a block on each device and can never silently gather the pool. Truncate
+and free touch no device memory at all (they only edit tables and the free
+list), so they are sharding-oblivious by construction.
 """
 from __future__ import annotations
 
+import functools
 import hashlib
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.distributed import sharding
 from repro.models import lm
 
 NULL_BLOCK = 0
@@ -48,7 +63,8 @@ class PagedKVCache:
     """Device KV pool + host free-list allocator + per-request block tables
     + content-hash prefix cache."""
 
-    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int):
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int,
+                 mesh=None):
         if num_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is the null block)")
         if block_size < 1:
@@ -56,7 +72,14 @@ class PagedKVCache:
         self.cfg = cfg
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.mesh = mesh
+        self.pool_shardings = None
         self.pools = lm.init_paged_cache(cfg, num_blocks, block_size)
+        if mesh is not None:
+            self.pool_shardings = sharding.make_paged_pool_shardings(
+                cfg, mesh, num_blocks, block_size)
+            self.pools = jax.device_put(self.pools, self.pool_shardings)
+        self._copy_fn = None             # lazily-built jitted COW block copy
         # LIFO free list: recently-freed blocks are reused first (locality)
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self._tables: Dict[int, List[int]] = {}
@@ -223,6 +246,27 @@ class PagedKVCache:
         self._tables[rid].append(blk)
         return blk
 
+    def _block_copy(self, src: int, dst: int) -> None:
+        """Device-side copy of one block (all layers, both pools) through a
+        single jitted donating call with traced block ids — one compile for
+        the cache's lifetime instead of one per (src, dst) pair, and with
+        explicit out_shardings under a mesh, so each device copies only its
+        local kv-head shard of the block (no gather, no resharding)."""
+        if self._copy_fn is None:
+            kwargs = {}
+            if self.pool_shardings is not None:
+                rep = sharding.replicated(self.mesh)
+                kwargs = dict(in_shardings=(self.pool_shardings, rep, rep),
+                              out_shardings=self.pool_shardings)
+
+            @functools.partial(jax.jit, donate_argnums=(0,), **kwargs)
+            def copy(pools, src, dst):
+                return {k: v.at[:, dst].set(v[:, src])
+                        for k, v in pools.items()}
+            self._copy_fn = copy
+        self.pools = self._copy_fn(self.pools, jnp.int32(src),
+                                   jnp.int32(dst))
+
     def ensure_writable(self, rid: int, block_idx: int) -> Optional[int]:
         """Copy-on-write guard: before writing into table slot ``block_idx``,
         a block shared with another live request (refcount > 1) is replaced
@@ -235,10 +279,7 @@ class PagedKVCache:
             return None
         new = self._take_block()
         self._ref[new] = 1
-        self.pools["kpool"] = self.pools["kpool"].at[:, new].set(
-            self.pools["kpool"][:, blk])
-        self.pools["vpool"] = self.pools["vpool"].at[:, new].set(
-            self.pools["vpool"][:, blk])
+        self._block_copy(blk, new)
         self._ref[blk] -= 1
         tbl[block_idx] = new
         self.cow_count += 1

@@ -33,13 +33,18 @@ class Drafter:
     def __init__(self, cfg_draft: ModelConfig, k: int):
         self.cfg = cfg_draft
         self.k = k
+        # tensor-parallel serving: the engine installs explicit
+        # in/out_shardings (params + pools sharded, host args replicated)
+        # so the whole k-step scan compiles under the mesh
+        self.jit_shardings: Dict = {}
         self._fns: Dict[Tuple[int, bool], callable] = {}
 
     def _jit(self, padded_batch: int, greedy: bool):
         if (padded_batch, greedy) not in self._fns:
             cfg, k = self.cfg, self.k
 
-            @functools.partial(jax.jit, donate_argnums=(1,))
+            @functools.partial(jax.jit, donate_argnums=(1,),
+                               **self.jit_shardings)
             def fn(params, pools, bt, sl0, tok0, draft_len, keys, temps,
                    topks, topps):
                 # keys: (k, B, 2) per-step per-request draft keys

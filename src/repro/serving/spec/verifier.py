@@ -47,6 +47,9 @@ class Verifier:
     def __init__(self, cfg_verify: ModelConfig, k: int):
         self.cfg = cfg_verify
         self.k = k
+        # tensor-parallel serving: the engine installs explicit
+        # in/out_shardings so the batched verify compiles under the mesh
+        self.jit_shardings: Dict = {}
         self._fns: Dict[int, callable] = {}
 
     # ------------------------------------------------------------ device side
@@ -55,7 +58,8 @@ class Verifier:
         if padded_batch not in self._fns:
             cfg = self.cfg
 
-            @functools.partial(jax.jit, donate_argnums=(1,))
+            @functools.partial(jax.jit, donate_argnums=(1,),
+                               **self.jit_shardings)
             def fn(params, pools, bt, start, num_new, toks):
                 logits, pools = lm.paged_verify(params, pools, bt, start,
                                                 num_new, toks, cfg)

@@ -444,3 +444,79 @@ def test_prefix_cache_off_engine_never_registers(dense_model):
     assert engine.kv.num_evictable == 0
     assert engine.kv.num_free == engine.kv.num_blocks - 1
     engine.kv.check_invariants()
+
+
+# --------------------------------------------------------------------------- #
+# property-style invariant churn (sharded + unsharded pools)
+# --------------------------------------------------------------------------- #
+
+def _fresh_pool(cfg, sharded: bool, num_blocks: int = 12) -> PagedKVCache:
+    if not sharded:
+        return PagedKVCache(cfg, num_blocks, BS)
+    from repro.distributed.sharding import make_serving_mesh
+    return PagedKVCache(cfg, num_blocks, BS, mesh=make_serving_mesh(1))
+
+
+@pytest.mark.parametrize("sharded", [False, True],
+                         ids=["unsharded", "sharded"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pool_invariants_under_random_cow_truncate_evict_churn(seed, sharded):
+    """Property-style: a seeded random interleaving of every pool mutation —
+    prefix-sharing admission, registration, block growth, copy-on-write,
+    speculative-rollback truncation, free/evict — must preserve the full
+    refcount partition (``check_invariants``) after EVERY operation, on a
+    mesh-sharded pool exactly as on an unsharded one (the allocator is
+    layout-agnostic: block ids mean the same thing on every shard)."""
+    cfg = _cfg()
+    rng = np.random.RandomState(seed)
+    kv = _fresh_pool(cfg, sharded)
+    # a small prompt vocabulary so admissions genuinely re-hit cached blocks
+    prompt_pool = [rng.randint(0, cfg.vocab_size, n).tolist()
+                   for n in (8, 8, 12, 5, 16, 9)]
+    prompt_pool.append(list(prompt_pool[0]))          # guaranteed duplicate
+    live = {}                                          # rid -> prompt
+    next_rid = 0
+    registered = set()
+    for step in range(120):
+        op = rng.choice(["admit", "register", "grow", "cow", "truncate",
+                         "free"])
+        if op == "admit":
+            prompt = prompt_pool[rng.randint(len(prompt_pool))]
+            n_blocks = kv.blocks_for(len(prompt)) + 1     # + one growth slot
+            matched, avail = kv.plan_admission(prompt)
+            if avail >= n_blocks - len(matched):
+                kv.allocate_prefix(next_rid, prompt, n_blocks,
+                                   matched=matched)
+                live[next_rid] = prompt
+                next_rid += 1
+        elif op == "register" and live:
+            rid = list(live)[rng.randint(len(live))]
+            if rid not in registered:
+                kv.register_prefix(rid, live[rid])
+                registered.add(rid)
+        elif op == "grow" and live and kv.num_available >= 1:
+            rid = list(live)[rng.randint(len(live))]
+            kv.append_block(rid)
+        elif op == "cow" and live and kv.num_available >= 1:
+            rid = list(live)[rng.randint(len(live))]
+            tbl = kv.block_table(rid)
+            kv.ensure_writable(rid, rng.randint(len(tbl)))
+        elif op == "truncate" and live:
+            # speculative rollback only ever drops scratch blocks PAST the
+            # prompt (committed length >= prompt length), so the model
+            # truncates at most down to the prompt's own blocks
+            rid = list(live)[rng.randint(len(live))]
+            tbl = kv.block_table(rid)
+            lo = kv.blocks_for(len(live[rid]))
+            if len(tbl) > lo:
+                kv.truncate(rid, rng.randint(lo, len(tbl)))
+        elif op == "free" and live:
+            rid = list(live)[rng.randint(len(live))]
+            kv.free(rid)
+            del live[rid]
+            registered.discard(rid)
+        kv.check_invariants()
+    for rid in list(live):
+        kv.free(rid)
+        kv.check_invariants()
+    assert kv.num_available == kv.num_blocks - 1
