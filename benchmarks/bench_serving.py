@@ -43,7 +43,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.distributed.sharding import make_serving_mesh
 from repro.models import lm
-from repro.serving import SamplingParams, ServingEngine, SpecConfig
+from repro.serving import (EVENT_TOKEN, SamplingParams, ServingEngine,
+                           SpecConfig, finished_outputs)
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -90,6 +91,101 @@ def make_shared_prefix_workload(num_requests: int, vocab: int, seed: int,
     return work
 
 
+def make_churn_workload(num_requests: int, vocab: int, seed: int,
+                        cancel_frac: float = 0.1, hi_frac: float = 0.3,
+                        arrival_rate: float = 0.6):
+    """Request churn the way real front ends see it: Poisson arrivals
+    (exponential inter-arrival gaps, in engine steps), ~10% of clients
+    cancel a few steps after submitting (disconnects), and traffic splits
+    into two priority tiers (interactive hi=1 over batch lo=0).
+
+    Returns [(arrival_step, prompt, max_tokens, priority, cancel_after)]
+    where cancel_after is None (stays) or steps-after-arrival to cancel.
+    """
+    rng = np.random.RandomState(seed)
+    work, t = [], 0.0
+    for i in range(num_requests):
+        t += rng.exponential(1.0 / arrival_rate)
+        plen = int(rng.randint(6, 28))
+        prompt = rng.randint(0, vocab, plen).tolist()
+        max_tokens = int(rng.choice([8, 12, 16]))
+        prio = 1 if rng.rand() < hi_frac else 0
+        cancel_after = int(rng.randint(2, 8)) if rng.rand() < cancel_frac \
+            else None
+        work.append((int(t), prompt, max_tokens, prio, cancel_after))
+    return work
+
+
+def run_churn(params, cfg, work, *, backend: str, scheduler: str,
+              block_size: int, max_batch: int, max_seq_len: int,
+              num_blocks=None, prefill_chunk: int = 64, mesh=None):
+    """Replay a churn workload through one engine via the handle/event API,
+    timing every TOKEN event for tail-latency stats. Asserts the KV pool
+    drains invariant-clean with zero leaked blocks."""
+    engine = ServingEngine(params, cfg, backend=backend,
+                           block_size=block_size, num_blocks=num_blocks,
+                           max_batch=max_batch, max_seq_len=max_seq_len,
+                           prefill_chunk=prefill_chunk, scheduler=scheduler,
+                           mesh=mesh)
+    handles, token_times, cancel_at, outs = {}, {}, {}, {}
+    pending = list(work)
+    step = 0
+    while pending or engine.has_unfinished():
+        while pending and pending[0][0] <= step:
+            _, prompt, max_tokens, prio, c_after = pending.pop(0)
+            h = engine.submit(prompt, sampling=SamplingParams(),
+                              max_tokens=max_tokens, priority=prio)
+            handles[h.rid] = h
+            token_times[h.rid] = []
+            if c_after is not None:
+                cancel_at[h.rid] = step + c_after
+        for rid, at in list(cancel_at.items()):
+            if handles[rid].finished:
+                del cancel_at[rid]           # finished before the disconnect
+            elif at <= step:
+                engine.cancel(rid)
+                del cancel_at[rid]
+        events = engine.step()
+        now = time.perf_counter()
+        for ev in events:
+            if ev.kind == EVENT_TOKEN:
+                token_times[ev.rid].extend([now] * len(ev.tokens))
+            elif ev.terminal:
+                outs[ev.rid] = ev.output
+        step += 1
+    engine.kv.check_invariants()
+    leaked = (engine.kv.num_blocks - 1) - engine.kv.num_available
+    assert leaked == 0, f"churn leaked {leaked} KV blocks"
+    assert len(outs) == len(work), "some requests never reached terminal"
+
+    def pct_ms(xs, q):
+        if not len(xs):
+            return None
+        return float(np.percentile(np.asarray(xs), q)) * 1e3
+
+    def tier_stats(prio):
+        mine = [o for o in outs.values() if o.priority == prio]
+        ttfts = [o.ttft for o in mine if o.token_ids]
+        itls = []
+        for o in mine:
+            ts = token_times[o.rid]
+            itls.extend(float(b - a) for a, b in zip(ts, ts[1:]))
+        return {"requests": len(mine),
+                "ttft_p50_ms": pct_ms(ttfts, 50),
+                "ttft_p95_ms": pct_ms(ttfts, 95),
+                "itl_p50_ms": pct_ms(itls, 50),
+                "itl_p95_ms": pct_ms(itls, 95)}
+
+    cancelled = [o for o in outs.values() if o.finish_reason == "cancelled"]
+    return {"scheduler": scheduler, "steps": step,
+            "requests": len(work),
+            "cancelled": len(cancelled),
+            "preempted": engine.preempted_total,
+            "tiers": {"hi": tier_stats(1), "lo": tier_stats(0)},
+            "outputs": {rid: o.token_ids for rid, o in outs.items()
+                        if o.finish_reason != "cancelled"}}
+
+
 def run_backend(params, cfg, backend: str, work, *, block_size: int,
                 max_batch: int, max_seq_len: int, prefix_cache: bool = True,
                 prefill_chunk: int = 64, mesh=None, spec=None):
@@ -117,7 +213,7 @@ def run_backend(params, cfg, backend: str, work, *, block_size: int,
                 _, prompt, max_tokens = pending.pop(0)
                 engine.add_request(prompt, sampling=SamplingParams(),
                                    max_tokens=max_tokens)
-            for o in engine.step():
+            for o in finished_outputs(engine.step()):
                 outs[o.rid] = o
             step += 1
         return outs
@@ -180,6 +276,9 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=64)
     ap.add_argument("--shared-prefix-requests", type=int, default=6,
                     help="requests in the shared-system-prompt workload")
+    ap.add_argument("--churn-requests", type=int, default=12,
+                    help="requests in the churn workload (Poisson arrivals, "
+                         "cancellations, two priority tiers)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree (shard params + paged KV "
                          "pools over a 1-D mesh; needs >= tp devices, e.g. "
@@ -189,6 +288,7 @@ def main(argv=None):
         args.num_requests = 2
         args.backends = "dense"
         args.shared_prefix_requests = 3
+        args.churn_requests = 8       # seed-0 draw includes 1 cancellation
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -252,6 +352,51 @@ def main(argv=None):
           f"{miss['prefill_tokens']} -> {hit['prefill_tokens']} "
           f"({savings:.1%} saved), outputs identical")
 
+    # ---- churn: Poisson arrivals, cancellations, two priority tiers -------
+    churn_work = make_churn_workload(args.churn_requests, cfg.vocab_size,
+                                     args.seed)
+    churn_seq = max(len(p) + m for _, p, m, _, _ in churn_work)
+    churn_seq = -(-churn_seq // args.block_size) * args.block_size
+    worst = -(-churn_seq // args.block_size)
+    # pool sized for ~2 worst-case requests: small enough that the priority
+    # scheduler actually preempts low-tier decodes under the burst
+    tight = 1 + 2 * worst
+    churn = run_churn(params, cfg, churn_work, backend=backend0,
+                      scheduler="priority", block_size=args.block_size,
+                      max_batch=args.max_batch, max_seq_len=churn_seq,
+                      num_blocks=tight, prefill_chunk=args.prefill_chunk,
+                      mesh=mesh)
+    print(f"# churn ({args.churn_requests} reqs, priority scheduler, "
+          f"{tight} blocks): {churn['cancelled']} cancelled, "
+          f"{churn['preempted']} preempted, {churn['steps']} steps, "
+          f"pool drained clean")
+    for tier in ("hi", "lo"):
+        t = churn["tiers"][tier]
+        if t["ttft_p50_ms"] is not None:
+            print(f"#   {tier}: n={t['requests']} "
+                  f"ttft p50/p95 {t['ttft_p50_ms']:.1f}/"
+                  f"{t['ttft_p95_ms']:.1f}ms, "
+                  f"itl p50/p95 {t['itl_p50_ms']:.1f}/"
+                  f"{t['itl_p95_ms']:.1f}ms")
+
+    # ---- scheduler identity: FCFS == priority when nothing contends -------
+    # same arrivals, no cancellations, ample pool/batch: policy must be
+    # invisible in outputs (greedy token identity), only visible under load
+    calm = [(t, p, m, prio, None) for t, p, m, prio, _ in churn_work]
+    ident = {}
+    for sched in ("fcfs", "priority"):
+        ident[sched] = run_churn(params, cfg, calm, backend=backend0,
+                                 scheduler=sched, block_size=args.block_size,
+                                 max_batch=max(args.max_batch,
+                                               len(calm)),
+                                 max_seq_len=churn_seq,
+                                 prefill_chunk=args.prefill_chunk, mesh=mesh)
+    assert ident["fcfs"]["outputs"] == ident["priority"]["outputs"], \
+        "scheduler policy changed greedy outputs on a no-contention workload"
+    assert ident["fcfs"]["preempted"] == ident["priority"]["preempted"] == 0
+    print("# scheduler identity: FCFS == priority token-identical "
+          "(no contention)")
+
     # ---- tp identity: sharded == unsharded, spec + prefix cache on --------
     tp_identity = None
     if mesh is not None:
@@ -297,6 +442,12 @@ def main(argv=None):
             "tp": args.tp,
             "tp_identity": tp_identity,
             "results": [trim(r) for r in results],
+            "churn": {k: v for k, v in churn.items() if k != "outputs"},
+            "scheduler_identity": {
+                "workload": "churn arrivals, no cancellations, ample pool",
+                "outputs_identical": True,
+                "schedulers": ["fcfs", "priority"],
+            },
             "shared_prefix": {
                 "num_requests": args.shared_prefix_requests,
                 "cache_hit_rate": hit["cache_hit_rate"],

@@ -28,7 +28,8 @@ import numpy as np
 from bench_serving import REPO_ROOT, make_workload, write_bench_json
 from repro.configs import get_config
 from repro.models import lm
-from repro.serving import SamplingParams, ServingEngine, SpecConfig
+from repro.serving import (SamplingParams, ServingEngine, SpecConfig,
+                           finished_outputs)
 
 
 def run_mode(params, cfg, work, *, backend: str, spec, block_size: int,
@@ -47,7 +48,7 @@ def run_mode(params, cfg, work, *, backend: str, spec, block_size: int,
                 _, prompt, max_tokens = pending.pop(0)
                 engine.add_request(prompt, sampling=SamplingParams(),
                                    max_tokens=max_tokens)
-            for o in engine.step():
+            for o in finished_outputs(engine.step()):
                 outs[o.rid] = o
             step += 1
         return outs

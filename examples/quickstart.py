@@ -12,6 +12,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import TrainConfig
 from repro.configs import get_config
@@ -47,6 +48,24 @@ def main():
                   f"nnz={float(m['nnz_mean']):6.1f}/{cfg.d_ff} |{bar:<40s}|")
     print("\nSparsity emerged from L1 regularization alone (Sec. 2.2). "
           "Run examples/sparsity_analysis.py next.")
+
+    # serve the freshly trained model: submit a request to the
+    # continuous-batching engine and stream tokens as they commit
+    from repro.serving import ServingEngine
+
+    engine = ServingEngine(params, cfg, backend="gather", block_size=8,
+                           max_batch=2, max_seq_len=48)
+    handle = engine.submit(np.asarray(batch["tokens"])[0, :16].tolist(),
+                           max_tokens=16)
+    print(f"\nserving the trained model (handle rid={handle.rid}):")
+    while not handle.finished:
+        engine.step()
+        delta = handle.new_tokens()
+        if delta:
+            print(f"  +{delta} ({handle.status})")
+    print(f"-> {handle.result().token_ids} "
+          f"(finish={handle.result().finish_reason}); "
+          "see docs/serving.md for streaming HTTP serving of the same API.")
 
 
 if __name__ == "__main__":

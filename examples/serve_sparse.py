@@ -42,7 +42,8 @@ def main():
     assert match == 1.0, "sparse path must be numerically faithful"
     print("TwELL inference path reproduces the dense model exactly.")
 
-    # same comparison through the continuous-batching engine (paged KV)
+    # same comparison through the continuous-batching engine: submit every
+    # prompt as a handle and stream tokens as the engine commits them
     from repro.serving import ServingEngine
 
     cfg = dataclasses.replace(base, sparsity=dataclasses.replace(
@@ -52,10 +53,17 @@ def main():
     for impl in ["dense", "gather"]:
         engine = ServingEngine(params, cfg, backend=impl, block_size=8,
                                max_batch=4, max_seq_len=32)
-        res = engine.generate([np.asarray(prompt[i]).tolist()
-                               for i in range(prompt.shape[0])],
-                              max_tokens=16)
-        eng_outs[impl] = np.stack([o.token_ids for o in res])
+        handles = [engine.submit(np.asarray(prompt[i]).tolist(),
+                                 max_tokens=16)
+                   for i in range(prompt.shape[0])]
+        while engine.has_unfinished():         # streaming print loop
+            engine.step()
+            for h in handles:
+                delta = h.new_tokens()
+                if delta:
+                    print(f"  [{impl}] req {h.rid} +{delta} "
+                          f"({h.status}, {len(h.tokens)} total)")
+        eng_outs[impl] = np.stack([h.result().token_ids for h in handles])
     match = (eng_outs["dense"] == eng_outs["gather"]).mean()
     print(f"engine (paged KV) agreement dense vs TwELL: {match:.2%}")
     assert match == 1.0

@@ -111,6 +111,19 @@ def main(argv=None):
     ap.add_argument("--mesh", action="store_true",
                     help="run the mesh-sharded engine path even at --tp 1 "
                          "(exercises the sharded code path on one device)")
+    ap.add_argument("--scheduler", default="fcfs",
+                    help="admission policy: fcfs | priority (priority "
+                         "preempts lower-priority running requests under "
+                         "pool pressure; they resume via the prefix cache)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve an OpenAI-style HTTP API "
+                         "(/v1/completions with SSE streaming; client "
+                         "disconnect cancels the request) instead of "
+                         "running the one-shot batch demo")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="HTTP port (0 = pick a free port; the chosen one "
+                         "is printed)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--static", action="store_true",
                     help="use the fixed-shape reference loop instead of the "
@@ -137,6 +150,9 @@ def main(argv=None):
     if (args.tp > 1 or args.mesh) and not use_engine:
         raise SystemExit("--tp/--mesh require the continuous-batching "
                          "engine (dense/moe family, no --static)")
+    if args.http and not use_engine:
+        raise SystemExit("--http requires the continuous-batching engine "
+                         "(dense/moe family, no --static)")
     if not use_engine:
         t0 = time.time()
         toks = generate(params, cfg, prompt, args.gen,
@@ -167,7 +183,35 @@ def main(argv=None):
         max_batch=args.max_batch or args.batch,
         max_seq_len=args.prompt_len + args.gen, seed=args.seed, spec=spec,
         prefix_cache=not args.no_prefix_cache,
-        prefill_chunk=args.prefill_chunk, mesh=mesh)
+        prefill_chunk=args.prefill_chunk, scheduler=args.scheduler,
+        # the HTTP server runs indefinitely: bound the per-step stats tail
+        # (totals never truncate; batch mode keeps full traces)
+        max_stats=4096 if args.http else None, mesh=mesh)
+
+    if args.http:
+        import signal
+
+        from repro.serving.server import ServingServer
+        server = ServingServer(engine, host=args.host, port=args.port)
+        server.start()
+        stop = {"flag": False}
+
+        def _sig(signum, frame):
+            stop["flag"] = True
+        signal.signal(signal.SIGINT, _sig)
+        signal.signal(signal.SIGTERM, _sig)
+        print(f"[serve/http] listening on http://{server.host}:{server.port} "
+              f"(backend={args.ffn_impl}, scheduler={args.scheduler}, "
+              f"tp={args.tp}; POST /v1/completions, GET /healthz)",
+              flush=True)
+        try:
+            while not stop["flag"]:
+                time.sleep(0.1)
+        except KeyboardInterrupt:
+            pass
+        server.shutdown()
+        print("[serve/http] clean shutdown", flush=True)
+        return None
     # no per-request seed: each request derives its own key from the engine
     # master key (identical prompts must not produce identical samples)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,

@@ -1,25 +1,41 @@
 """Continuous-batching serving engine on the TwELL sparse decode path.
 
 Subsystem layout:
-  engine.py    — ``ServingEngine``: request queue, prefix-cache-aware
-                 admission control, the chunked batched prefill scheduler
-                 (fixed-size prompt chunks interleaved with decode; same-step
-                 admissions share one dispatch), and the step loop
-                 (join-on-arrival, evict-on-EOS/max-tokens, bucketed padding
-                 so recompilation is bounded; optional speculative
-                 draft->verify->rollback step for spec-eligible requests).
+  engine.py    — ``ServingEngine``: the handle-and-event front door
+                 (``submit() -> RequestHandle``, per-step ``StepEvent``s,
+                 ``cancel()``), prefix-cache-aware admission control under a
+                 pluggable ``Scheduler`` (with preemption), the chunked
+                 batched prefill scheduler (fixed-size prompt chunks
+                 interleaved with decode; same-step admissions share one
+                 dispatch), and the step loop (join-on-arrival,
+                 evict-on-EOS/max-tokens, bucketed padding so recompilation
+                 is bounded; optional speculative draft->verify->rollback
+                 step for spec-eligible requests). ``generate()`` is the
+                 batch-synchronous compat shim.
+  scheduler.py — ``Scheduler`` policy interface: ``FCFSScheduler`` (strict
+                 arrival order, never preempts) and ``PriorityScheduler``
+                 (priority tiers; preempts strictly-lower-priority running
+                 requests under pressure — their KV parks in the prefix
+                 cache and they resume nearly for free).
   kv_cache.py  — ``PagedKVCache``: block-paged KV pool with free-list
                  allocation, per-request block tables, tail truncation, and
                  automatic prefix caching (per-block refcounts, content-hash
                  index over full blocks, copy-on-write sharing, LRU eviction
-                 of unreferenced cached blocks).
-  request.py   — ``Request`` / ``RequestOutput`` dataclasses + lifecycle.
-  sampling.py  — ``SamplingParams`` + batched greedy/temperature/top-k/top-p
-                 sampling with per-request PRNG keys, and the shared
-                 ``filter_logits`` truncation the speculative verifier reuses.
+                 of unreferenced cached blocks). ``free()`` doubles as the
+                 preemption primitive (registered blocks park, still
+                 matchable).
+  request.py   — ``Request`` / ``RequestOutput`` / ``RequestHandle`` /
+                 ``StepEvent`` dataclasses + the request lifecycle.
+  sampling.py  — ``SamplingParams`` (incl. per-request ``seed``) + batched
+                 greedy/temperature/top-k/top-p sampling with per-request
+                 PRNG keys, and the shared ``filter_logits`` truncation the
+                 speculative verifier reuses.
   backends.py  — ``ServingBackend`` ABC selecting the FFN execution path
                  (dense | gather/TwELL | tile_skip) per step, plus
                  ``DraftPair`` draft/verify pairs for speculative decoding.
+  server.py    — ``ServingServer``: OpenAI-style HTTP front end
+                 (``/v1/completions`` with SSE streaming; client disconnect
+                 cancels the request) over one engine thread.
   spec/        — self-speculative decoding: ``SpecConfig``, the tile-skip
                  ``Drafter``, the trusted-path ``Verifier`` (exact rejection
                  sampling), and KV ``rollback``.
@@ -28,13 +44,20 @@ from repro.serving.backends import (DraftPair, ServingBackend, get_backend,
                                     make_draft_pair)
 from repro.serving.engine import ServingEngine, StepStats
 from repro.serving.kv_cache import PagedKVCache
-from repro.serving.request import Request, RequestOutput
+from repro.serving.request import (EVENT_CANCEL, EVENT_FINISH, EVENT_PREEMPT,
+                                   EVENT_TOKEN, Request, RequestHandle,
+                                   RequestOutput, StepEvent, finished_outputs)
 from repro.serving.sampling import (SamplingParams, filter_logits,
                                     sample_tokens)
+from repro.serving.scheduler import (FCFSScheduler, PriorityScheduler,
+                                     Scheduler, get_scheduler)
 from repro.serving.spec import SpecConfig
 
 __all__ = [
     "ServingEngine", "StepStats", "PagedKVCache", "Request", "RequestOutput",
+    "RequestHandle", "StepEvent", "finished_outputs",
+    "EVENT_TOKEN", "EVENT_FINISH", "EVENT_PREEMPT", "EVENT_CANCEL",
+    "Scheduler", "FCFSScheduler", "PriorityScheduler", "get_scheduler",
     "SamplingParams", "sample_tokens", "filter_logits", "ServingBackend",
     "get_backend", "DraftPair", "make_draft_pair", "SpecConfig",
 ]

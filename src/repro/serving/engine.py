@@ -1,7 +1,18 @@
 """Continuous-batching serving engine over the paged KV cache.
 
+The front door is handle-and-event shaped: ``submit()`` returns a
+``RequestHandle`` immediately (incremental ``new_tokens()`` deltas, status,
+``cancel()``), and each ``step()`` returns the ``StepEvent`` list for that
+iteration — TOKEN / FINISH / PREEMPT / CANCEL per affected row — so callers
+stream tokens as they commit instead of polling for finished requests.
+``generate()`` remains as a thin batch-synchronous shim over the same path.
+
 One ``step()`` is one engine iteration:
 
+  0. cancel — requests flagged by ``cancel()`` since the last step are
+     aborted wherever they are (queued, mid-chunked-prefill, mid-decode,
+     mid-speculation): KV blocks are freed/parked, growth reservations
+     returned, and a CANCEL event carries the partial output.
   1. decode — every running request advances one token through a single
      jitted ``lm.paged_decode_step`` call (batch padded to a power-of-two
      bucket, so recompilation is bounded by ``log2(max_batch)``); sampling
@@ -9,19 +20,25 @@ One ``step()`` is one engine iteration:
      same jitted call. Requests hitting EOS or ``max_tokens`` are evicted
      and their KV blocks released (registered prefix blocks park in the
      cache's evictable LRU, everything else returns to the free list).
-  2. admit — waiting requests join as soon as the batch has a slot and the
-     KV pool can cover their worst case (prompt + max_tokens blocks:
+  2. admit — the ``Scheduler`` (policy: FCFS default, priority optional)
+     names the next candidate; it joins once the batch has a slot and the
+     KV pool can cover its worst case (prompt + max_tokens blocks:
      reservation-style admission control, so decode-time block growth can
-     never fail). With prefix caching on, admission first matches the
-     longest cached block-aligned prefix of the prompt and shares those
-     blocks (refcounted, copy-on-write) — only suffix blocks are newly
-     allocated, and only suffix tokens are ever computed.
+     never fail). When the candidate does NOT fit, the scheduler may name a
+     running victim to **preempt**: the victim's KV is freed (registered
+     full prompt blocks park in the prefix cache, still matchable), its
+     reservation returns to the pool, and it re-queues keeping its
+     committed output tokens — resume re-prefills ``prompt + outputs``,
+     re-sharing any still-cached prompt blocks nearly for free. With prefix
+     caching on, admission first matches the longest cached block-aligned
+     prefix and shares those blocks (refcounted, copy-on-write) — only
+     suffix blocks are newly allocated, only suffix tokens computed.
   3. prefill — ALL in-flight prefills (just-admitted and partially done)
      advance together through ONE batched ``lm.paged_prefill`` call, at
      most ``prefill_chunk`` tokens each. Long prompts therefore prefill in
      fixed-size chunks interleaved with decode steps — bounded TTFT impact
      on running requests — and same-step admissions share a single
-     dispatch. A request whose prompt completes samples its first token in
+     dispatch. A request whose prefill completes samples its next token in
      the same call (from the last valid row's logits only: the O(V) head
      never materializes over the whole chunk) and joins the next
      iteration's decode batch ("join-on-arrival").
@@ -36,19 +53,25 @@ scan, the verifier) under a ``jax.sharding.Mesh`` with explicit
 in/out_shardings — params and the paged KV pools split over the ``model``
 axis (attention heads / FFN hidden / vocab / kv-head pool axis), while the
 scheduler's state (block tables, seq lens, tokens, sampling knobs) stays
-replicated. Scheduling, admission, prefix caching, and rollback are
-host-side and layout-agnostic, so the engine is byte-for-byte the same
-code path sharded or not; the only per-step host transfer either way is
-the sampled-token row.
+replicated. Scheduling, admission, prefix caching, cancellation,
+preemption, and rollback are host-side and layout-agnostic, so the engine
+is byte-for-byte the same code path sharded or not; the only per-step host
+transfer either way is the sampled-token row.
+
+Thread safety: ``submit`` and ``step`` serialize on one engine lock, so an
+HTTP front end may submit from handler threads while a single engine thread
+drives ``step()``. ``cancel`` is lock-free — it only flags the request
+(atomic under the GIL; processed at the next step) — so it never waits out
+a step's device work.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import functools
+import threading
 import time
-from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -61,9 +84,13 @@ from repro.serving import sampling as sampling_mod
 from repro.serving.backends import (DECODE, PREFILL, get_backend,
                                     make_draft_pair)
 from repro.serving.kv_cache import PagedKVCache
-from repro.serving.request import (FINISHED, PREFILLING, RUNNING, Request,
-                                   RequestOutput)
+from repro.serving.request import (CANCELLED, EVENT_CANCEL, EVENT_FINISH,
+                                   EVENT_PREEMPT, EVENT_TOKEN,
+                                   FINISH_CANCELLED, FINISHED, PREEMPTED,
+                                   PREFILLING, RUNNING, Request,
+                                   RequestHandle, RequestOutput, StepEvent)
 from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Scheduler, get_scheduler
 from repro.serving.spec import (Drafter, SpecConfig, Verifier,
                                 rollback_after_verify)
 
@@ -76,7 +103,7 @@ class StepStats:
     decode_batch: int        # live rows in this step's normal-decode call
     padded_batch: int        # bucketed batch the kernel actually ran
     prefills: int            # requests admitted this step
-    finished: int
+    finished: int            # FINISH events (EOS / length) this step
     running_after: int
     waiting_after: int
     free_blocks: int         # admissible capacity: free + evictable cached
@@ -86,6 +113,8 @@ class StepStats:
     prefilling_after: int = 0        # requests mid-prefill after this step
     prefill_tokens: int = 0          # prompt tokens computed this step
     cached_prefix_tokens: int = 0    # prompt tokens served from cache (admits)
+    cancelled: int = 0       # CANCEL events processed this step
+    preempted: int = 0       # PREEMPT events (scheduler evictions) this step
     spec_batch: int = 0      # rows that ran draft->verify this step
     spec_drafted: int = 0    # draft tokens proposed this step
     spec_accepted: int = 0   # ... of which the verifier accepted
@@ -113,7 +142,8 @@ class ServingEngine:
                  record_logits: bool = False,
                  spec: Optional[SpecConfig] = None,
                  prefix_cache: bool = True, prefill_chunk: int = 64,
-                 mesh=None):
+                 scheduler: Union[str, Scheduler] = "fcfs",
+                 max_stats: Optional[int] = None, mesh=None):
         self.backend = get_backend(backend)
         self.cfg = cfg
         self.cfg_prefill = self.backend.configure(cfg, PREFILL)
@@ -161,20 +191,37 @@ class ServingEngine:
             self.verifier.jit_shardings = sharding.serving_jit_shardings(
                 mesh, self._param_shardings, self.kv.pool_shardings, 4, 1)
         self.table_width = -(-max_seq_len // block_size)
-        self.waiting: Deque[Request] = deque()
+        self.scheduler: Scheduler = get_scheduler(scheduler)
         self.prefilling: List[Request] = []
         self.running: List[Request] = []
         self.stats: List[StepStats] = []
         self.prefill_tokens_total = 0      # prompt tokens actually computed
         self.cached_tokens_total = 0       # prompt tokens served from cache
         self.prompt_tokens_total = 0       # prompt tokens admitted overall
+        self.finished_total = 0            # requests finished (EOS / length)
+        self.cancelled_total = 0           # requests aborted via cancel()
+        self.preempted_total = 0           # scheduler evictions (resumes)
+        self.max_stats = max_stats         # keep only the newest N StepStats
+        #                                    (None = unbounded; a long-lived
+        #                                    server MUST bound it — totals
+        #                                    above never truncate)
+        self.on_new_work = None            # optional callable: submit/cancel
+        #                                    wake-up hook for a server loop
         self._master_key = jax.random.PRNGKey(seed)
         self._next_rid = 0
         self._step_idx = 0
         self._reserved = 0            # growth blocks promised to running reqs
         self._sync_s = 0.0            # device-sync seconds within this step
+        self._lock = threading.RLock()
+        self._requests: Dict[int, Request] = {}    # every non-terminal rid
+        self._handles: Dict[int, RequestHandle] = {}
         self._decode_fns: Dict[int, callable] = {}
         self._prefill_fns: Dict[int, callable] = {}
+
+    @property
+    def waiting(self) -> List[Request]:
+        """Queued (waiting or preempted) requests, scheduler order opaque."""
+        return list(self.scheduler)
 
     def _mesh_ctx(self):
         """Ambient-mesh context for tracing/dispatching jitted serving calls
@@ -198,92 +245,161 @@ class ServingEngine:
             jax.block_until_ready(o)
         self._sync_s += time.perf_counter() - t0
 
+    def _wake(self) -> None:
+        if self.on_new_work is not None:
+            self.on_new_work()
+
     # ------------------------------------------------------------------ API
+
+    def submit(self, prompt: Sequence[int], *,
+               sampling: Optional[SamplingParams] = None,
+               max_tokens: int = 16,
+               eos_token_id: Optional[int] = None,
+               no_spec: bool = False,
+               priority: int = 0,
+               stream: bool = False) -> RequestHandle:
+        """Queue a request; returns its ``RequestHandle`` immediately.
+        Admission happens in ``step()`` under the engine's scheduler policy.
+
+        priority: larger = more urgent. The FCFS scheduler ignores it; the
+        priority scheduler admits high tiers first and may preempt running
+        lower-priority requests under pool pressure.
+        stream: buffer this request's ``StepEvent``s on the handle
+        (``handle.events()`` drains them); ``new_tokens()`` works either way.
+        ``no_spec`` opts this request out of speculative decoding (it will
+        run single-token decode even in a speculating engine)."""
+        with self._lock:
+            sp = sampling or SamplingParams()
+            req = Request(rid=self._next_rid, prompt=list(map(int, prompt)),
+                          max_tokens=max_tokens, sampling=sp,
+                          eos_token_id=eos_token_id, no_spec=no_spec,
+                          priority=priority)
+            if req.seq_len + max_tokens > self.max_seq_len:
+                raise ValueError(
+                    f"prompt ({len(req.prompt)}) + max_tokens ({max_tokens}) "
+                    f"exceeds max_seq_len ({self.max_seq_len})")
+            worst = self.kv.blocks_for(len(req.prompt) + max_tokens)
+            if worst > self.kv.num_blocks - 1:
+                raise ValueError(
+                    f"request needs {worst} KV blocks but the pool only has "
+                    f"{self.kv.num_blocks - 1}; it could never be admitted")
+            req.base_key = sampling_mod.request_base_key(
+                self._master_key, req.rid, sp.seed)
+            if self.record_logits:
+                req.logits_trace = []
+            self._next_rid += 1
+            handle = RequestHandle(self, req, stream=stream)
+            self._requests[req.rid] = req
+            self._handles[req.rid] = handle
+            self.scheduler.add(req)
+        self._wake()
+        return handle
 
     def add_request(self, prompt: Sequence[int], *,
                     sampling: Optional[SamplingParams] = None,
                     max_tokens: int = 16,
                     eos_token_id: Optional[int] = None,
                     no_spec: bool = False) -> int:
-        """Queue a request; returns its id. Admission happens in step().
-        ``no_spec`` opts this request out of speculative decoding (it will
-        run single-token decode even in a speculating engine)."""
-        sp = sampling or SamplingParams()
-        req = Request(rid=self._next_rid, prompt=list(map(int, prompt)),
-                      max_tokens=max_tokens, sampling=sp,
-                      eos_token_id=eos_token_id, no_spec=no_spec)
-        if req.seq_len + max_tokens > self.max_seq_len:
-            raise ValueError(
-                f"prompt ({len(req.prompt)}) + max_tokens ({max_tokens}) "
-                f"exceeds max_seq_len ({self.max_seq_len})")
-        worst = self.kv.blocks_for(len(req.prompt) + max_tokens)
-        if worst > self.kv.num_blocks - 1:
-            raise ValueError(
-                f"request needs {worst} KV blocks but the pool only has "
-                f"{self.kv.num_blocks - 1}; it could never be admitted")
-        req.base_key = (jax.random.PRNGKey(sp.seed) if sp.seed is not None
-                        else jax.random.fold_in(self._master_key, req.rid))
-        if self.record_logits:
-            req.logits_trace = []
-        self._next_rid += 1
-        self.waiting.append(req)
-        return req.rid
+        """Compat shim over ``submit()``: queue a request, return its id."""
+        return self.submit(prompt, sampling=sampling, max_tokens=max_tokens,
+                           eos_token_id=eos_token_id, no_spec=no_spec).rid
+
+    def cancel(self, request: Union[RequestHandle, int]) -> bool:
+        """Abort a request wherever it is in its lifecycle — queued,
+        mid-chunked-prefill, mid-decode, or mid-speculation. Takes effect at
+        the next ``step()``, which frees/parks its KV blocks, returns its
+        growth reservation, and emits a CANCEL event carrying the partial
+        output. Returns False when the request is unknown or already
+        terminal (cancellation raced completion — the output stands)."""
+        rid = request.rid if isinstance(request, RequestHandle) \
+            else int(request)
+        # deliberately lock-free: step() holds the engine lock across device
+        # compute, and cancellation must not wait a whole step to be noted.
+        # Safe because this only READS the registry and SETS a bool (both
+        # atomic under the GIL); flagging a request that concurrently
+        # reached a terminal state is a no-op (the flag is never read again).
+        req = self._requests.get(rid)
+        if req is None or req.done:
+            return False
+        req.cancel_requested = True
+        self._wake()
+        return True
 
     def has_unfinished(self) -> bool:
-        return bool(self.waiting or self.prefilling or self.running)
+        return bool(len(self.scheduler) or self.prefilling or self.running)
 
-    def step(self) -> List[RequestOutput]:
-        """One engine iteration: advance the running batch (speculative
-        draft->verify for eligible requests, single-token decode for the
-        rest), admit waiting requests (prefix-cache-aware), then advance
-        every in-flight prefill by one chunk through a single batched call.
-        Returns the requests that finished."""
+    def step(self) -> List[StepEvent]:
+        """One engine iteration: process pending cancellations, advance the
+        running batch (speculative draft->verify for eligible requests,
+        single-token decode for the rest), admit waiting requests under the
+        scheduler policy (prefix-cache-aware, possibly preempting), then
+        advance every in-flight prefill by one chunk through a single
+        batched call. Returns this iteration's StepEvents in commit order;
+        they are also dispatched to each request's handle."""
+        with self._lock:
+            return self._step_locked()
+
+    def _step_locked(self) -> List[StepEvent]:
         t_step = time.perf_counter()
         self._sync_s = 0.0
-        finished: List[RequestOutput] = []
+        events: List[StepEvent] = []
+        events += self._process_cancels()
         decode_batch = padded = 0
         spec_batch = drafted = accepted = 0
         if self.running:
             spec_rows = [r for r in self.running if self._can_spec(r)]
             normal_rows = [r for r in self.running if not self._can_spec(r)]
             if normal_rows:
-                decode_batch, padded, fin = self._decode(normal_rows)
-                finished.extend(fin)
+                decode_batch, padded, evs = self._decode(normal_rows)
+                events.extend(evs)
             if spec_rows:
-                spec_batch, drafted, accepted, fin = \
+                spec_batch, drafted, accepted, evs = \
                     self._spec_decode(spec_rows)
-                finished.extend(fin)
-        admitted, cached_toks = self._admit()
-        pf_tokens, fin = self._prefill_step()
-        finished.extend(fin)
+                events.extend(evs)
+        admitted, cached_toks, evs = self._admit()
+        events.extend(evs)
+        pf_tokens, evs = self._prefill_step()
+        events.extend(evs)
         self._step_idx += 1
+        n_fin = sum(1 for e in events if e.kind == EVENT_FINISH)
+        n_cancel = sum(1 for e in events if e.kind == EVENT_CANCEL)
+        n_preempt = sum(1 for e in events if e.kind == EVENT_PREEMPT)
         self.stats.append(StepStats(
             step=self._step_idx, decode_batch=decode_batch,
-            padded_batch=padded, prefills=admitted, finished=len(finished),
-            running_after=len(self.running), waiting_after=len(self.waiting),
+            padded_batch=padded, prefills=admitted, finished=n_fin,
+            running_after=len(self.running),
+            waiting_after=len(self.scheduler),
             free_blocks=self.kv.num_available - self._reserved,
             reserved_blocks=self._reserved,
             cached_blocks=self.kv.num_evictable,
             prefilling_after=len(self.prefilling),
             prefill_tokens=pf_tokens, cached_prefix_tokens=cached_toks,
+            cancelled=n_cancel, preempted=n_preempt,
             spec_batch=spec_batch,
             spec_drafted=drafted, spec_accepted=accepted,
             wall_ms=(time.perf_counter() - t_step) * 1e3,
             sync_ms=self._sync_s * 1e3))
-        return finished
+        if self.max_stats is not None and len(self.stats) >= 2 * self.max_stats:
+            del self.stats[:-self.max_stats]     # amortized O(1) trim
+        for ev in events:
+            h = self._handles.get(ev.rid)
+            if h is not None:
+                h._on_event(ev)
+                if ev.terminal:
+                    self._handles.pop(ev.rid, None)
+        return events
 
     def generate(self, prompts: Sequence[Sequence[int]], *,
                  sampling: Optional[SamplingParams] = None,
                  max_tokens: int = 16,
                  eos_token_id: Optional[int] = None) -> List[RequestOutput]:
-        """Convenience driver: submit everything, drain, return in order."""
-        rids = [self.add_request(p, sampling=sampling, max_tokens=max_tokens,
-                                 eos_token_id=eos_token_id) for p in prompts]
-        outs: Dict[int, RequestOutput] = {}
+        """Batch-synchronous compat shim over the handle API: submit
+        everything, drain the engine, return outputs in submission order."""
+        handles = [self.submit(p, sampling=sampling, max_tokens=max_tokens,
+                               eos_token_id=eos_token_id) for p in prompts]
         while self.has_unfinished():
-            for o in self.step():
-                outs[o.rid] = o
-        return [outs[r] for r in rids]
+            self.step()
+        return [h.result() for h in handles]
 
     # ------------------------------------------------------------ internals
 
@@ -334,15 +450,62 @@ class ServingEngine:
         return self._prefill_fns[key]
 
     def _finish(self, req: Request, reason: str) -> RequestOutput:
-        req.status = FINISHED
+        """Terminal transition (EOS / length / cancel), from ANY live state:
+        queued requests hold no KV; admitted ones free/park their blocks and
+        return their growth reservation."""
+        if req.rid in self.kv:
+            self.kv.free(req.rid)
+        req.status = CANCELLED if reason == FINISH_CANCELLED else FINISHED
         req.finish_reason = reason
         req.finish_time = time.perf_counter()
+        self._reserved -= req.reserved_blocks
+        req.reserved_blocks = 0
+        req.cow_spare = 0
+        self.running = [r for r in self.running if r.rid != req.rid]
+        self.prefilling = [r for r in self.prefilling if r.rid != req.rid]
+        self._requests.pop(req.rid, None)
+        return RequestOutput.from_request(req)
+
+    def _terminal_event(self, req: Request, reason: str) -> StepEvent:
+        out = self._finish(req, reason)
+        kind = EVENT_CANCEL if reason == FINISH_CANCELLED else EVENT_FINISH
+        if kind == EVENT_CANCEL:
+            self.cancelled_total += 1
+        else:
+            self.finished_total += 1
+        return StepEvent(kind=kind, rid=req.rid, step=self._step_idx,
+                         output=out)
+
+    def _process_cancels(self) -> List[StepEvent]:
+        """Abort every request flagged since the last step, wherever it is:
+        queued (no KV to release), or admitted (prefilling/running/spec —
+        blocks freed or parked, reservation returned)."""
+        events: List[StepEvent] = []
+        for req in [r for r in self.scheduler if r.cancel_requested]:
+            self.scheduler.remove(req.rid)
+            events.append(self._terminal_event(req, FINISH_CANCELLED))
+        for req in [r for r in self.prefilling + self.running
+                    if r.cancel_requested]:
+            events.append(self._terminal_event(req, FINISH_CANCELLED))
+        return events
+
+    def _preempt(self, req: Request) -> StepEvent:
+        """Evict a RUNNING request to relieve pool/slot pressure: free/park
+        its KV (registered prompt blocks stay matchable in the prefix
+        cache), return its reservation, and re-queue it. Committed output
+        tokens are kept — resume re-prefills ``prompt + outputs`` and
+        continues exactly where it left off (token-identical: per-token
+        sampling keys depend only on committed-output length)."""
         self.kv.free(req.rid)
         self._reserved -= req.reserved_blocks
         req.reserved_blocks = 0
         self.running = [r for r in self.running if r.rid != req.rid]
-        self.prefilling = [r for r in self.prefilling if r.rid != req.rid]
-        return RequestOutput.from_request(req)
+        req.status = PREEMPTED
+        req.num_preemptions += 1
+        self.preempted_total += 1
+        self.scheduler.add(req)
+        return StepEvent(kind=EVENT_PREEMPT, rid=req.rid,
+                         step=self._step_idx)
 
     def _can_spec(self, req: Request) -> bool:
         """Speculate when >= 2 tokens of budget remain (accepting even one
@@ -390,14 +553,17 @@ class ServingEngine:
                 jnp.asarray(topks), jnp.asarray(topps))
         self._sync(next_toks)
         next_toks = np.asarray(next_toks)
-        finished = []
+        events: List[StepEvent] = []
         for i, r in enumerate(batch):
             if r.logits_trace is not None:
                 r.logits_trace.append(np.asarray(logits[i], np.float32))
             reason = r.append(next_toks[i])
+            events.append(StepEvent(kind=EVENT_TOKEN, rid=r.rid,
+                                    step=self._step_idx,
+                                    tokens=(int(next_toks[i]),)))
             if reason:
-                finished.append(self._finish(r, reason))
-        return b, padded, finished
+                events.append(self._terminal_event(r, reason))
+        return b, padded, events
 
     def _spec_decode(self, rows: List[Request]):
         """Draft -> verify -> accept -> rollback for the speculating rows.
@@ -466,7 +632,7 @@ class ServingEngine:
         self._sync(t_logits)
         t_logits = np.asarray(t_logits)
         d_logits_np = None if all_greedy else np.asarray(d_logits)
-        finished = []
+        events: List[StepEvent] = []
         drafted_total = accepted_total = 0
         for i, r in enumerate(rows):
             k_eff = k_effs[i]
@@ -479,84 +645,138 @@ class ServingEngine:
             drafted_total += k_eff
             accepted_total += n_acc
             reason = None
+            committed = []
             for j, tok in enumerate(emitted):
                 if r.logits_trace is not None:
                     r.logits_trace.append(t_logits[i, j].astype(np.float32))
+                committed.append(int(tok))
                 reason = r.append(int(tok))
                 if reason:
                     break
+            events.append(StepEvent(kind=EVENT_TOKEN, rid=r.rid,
+                                    step=self._step_idx,
+                                    tokens=tuple(committed)))
             if reason:
-                finished.append(self._finish(r, reason))
+                events.append(self._terminal_event(r, reason))
             else:
                 # rollback: blocks past the committed length (seq_len - 1
                 # cached slots) return to the pool and the reservation
                 freed = rollback_after_verify(self.kv, r.rid, r.seq_len - 1)
                 r.reserved_blocks += freed
                 self._reserved += freed
-        return b, drafted_total, accepted_total, finished
+        return b, drafted_total, accepted_total, events
 
     def _admit(self):
-        """Move waiting requests into the prefill stage while a batch slot
-        and (prefix-cache-aware) worst-case block capacity exist. Matched
-        prefix blocks are shared instead of recomputed: only the suffix is
-        allocated fresh and only suffix tokens will be prefilled."""
+        """Admit queued requests under the scheduler policy while a batch
+        slot and (prefix-cache-aware) worst-case block capacity exist.
+        Matched prefix blocks are shared instead of recomputed: only the
+        suffix is allocated fresh and only suffix tokens will be prefilled.
+        When the candidate does NOT fit, the scheduler may name a running
+        victim to preempt — freeing its blocks (and slot) for the candidate
+        and re-queueing it to resume later."""
         admitted = 0
         cached_tokens = 0
-        while self.waiting and \
-                len(self.running) + len(self.prefilling) < self.max_batch:
-            req = self.waiting[0]
-            plen = len(req.prompt)
-            total = self.kv.blocks_for(plen + req.max_tokens)
+        events: List[StepEvent] = []
+        while True:
+            req = self.scheduler.peek()
+            if req is None:
+                break
+            # a preempted request resumes by re-prefilling its prompt PLUS
+            # its committed outputs (KV for both was dropped at preemption);
+            # for a fresh request this is just the prompt
+            target = req.prompt + req.output_tokens
+            tlen = len(target)
+            total = self.kv.blocks_for(len(req.prompt) + req.max_tokens)
             if self.prefix_cache:
-                matched, avail = self.kv.plan_admission(req.prompt)
+                matched, avail = self.kv.plan_admission(target)
             else:
                 matched, avail = [], self.kv.num_available
-            # a fully cached prompt recomputes its last position inside a
+            # a fully cached target recomputes its last position inside a
             # matched block, which may need a copy-on-write block mid-step:
             # budget it here (and reserve it below) or ensure_writable could
             # steal a block promised to another request's decode growth
-            spare = 1 if len(matched) * self.kv.block_size >= plen else 0
-            if avail - self._reserved < total - len(matched) + spare:
-                break                      # admission control: no preemption
-            self.waiting.popleft()
-            prompt_blocks = self.kv.blocks_for(plen)
+            spare = 1 if len(matched) * self.kv.block_size >= tlen else 0
+            need = total - len(matched) + spare
+            have_slot = len(self.running) + len(self.prefilling) \
+                < self.max_batch
+            if not have_slot or avail - self._reserved < need:
+                # plan the full victim set BEFORE evicting anyone: if even
+                # preempting every victim the policy would offer cannot fit
+                # the candidate, defer without wasting their KV/progress.
+                # A victim's table block only becomes available if no OTHER
+                # live request still references it (shared prefix blocks
+                # decref, they don't free), so simulate the refcounts of the
+                # whole plan; reservations always return in full.
+                plan: List[Request] = []
+                sim_running = list(self.running)
+                sim_dec: Dict[int, int] = {}
+                freeable = 0
+                feasible = False
+                while True:
+                    victim = self.scheduler.pick_victim(req, sim_running)
+                    if victim is None:
+                        break
+                    sim_running.remove(victim)
+                    plan.append(victim)
+                    for blk in self.kv.block_table(victim.rid):
+                        sim_dec[blk] = sim_dec.get(blk, 0) + 1
+                        if self.kv.ref_count(blk) == sim_dec[blk]:
+                            freeable += 1        # last reference: frees/parks
+                    freeable += victim.reserved_blocks
+                    slot_ok = len(sim_running) + len(self.prefilling) \
+                        < self.max_batch
+                    if slot_ok and \
+                            avail + freeable - self._reserved >= need:
+                        feasible = True
+                        break
+                if not feasible:
+                    break              # defer: preemption cannot help
+                for victim in plan:
+                    events.append(self._preempt(victim))
+                continue               # capacity changed: re-plan admission
+            self.scheduler.take(req)
+            target_blocks = self.kv.blocks_for(tlen)
             if self.prefix_cache:
-                hit = self.kv.allocate_prefix(req.rid, req.prompt,
-                                              prompt_blocks, matched=matched)
+                hit = self.kv.allocate_prefix(req.rid, target, target_blocks,
+                                              matched=matched)
             else:
-                self.kv.allocate(req.rid, prompt_blocks)
+                self.kv.allocate(req.rid, target_blocks)
                 hit = 0
-            # a fully cached prompt still recomputes its last position: the
-            # engine needs that position's logits to sample the first token
-            start = min(hit, plen - 1)
+            # a fully cached target still recomputes its last position: the
+            # engine needs that position's logits to sample the next token
+            start = min(hit, tlen - 1)
             req.prefill_pos = start
+            req.prefill_target = target
             req.cached_prefix_tokens = start
             cached_tokens += start
             self.cached_tokens_total += start
-            self.prompt_tokens_total += plen
+            self.prompt_tokens_total += tlen
             req.cow_spare = spare
-            req.reserved_blocks = total - prompt_blocks + spare
+            req.reserved_blocks = total - target_blocks + spare
             self._reserved += req.reserved_blocks
             req.status = PREFILLING
             self.prefilling.append(req)
             admitted += 1
-        return admitted, cached_tokens
+        return admitted, cached_tokens, events
 
     def _prefill_step(self):
         """Advance every in-flight prefill by one chunk in ONE batched call.
 
-        Each row computes up to ``prefill_chunk`` prompt tokens starting at
-        its ``prefill_pos``, appended to whatever the cache already holds
-        (cached prefix + earlier chunks) with per-row RoPE offsets. Rows
-        whose prompt completes sample their first token from the same call
-        and join the decode batch; the rest resume next step, interleaved
-        with decode (bounded TTFT impact on running requests)."""
+        Each row computes up to ``prefill_chunk`` tokens of its prefill
+        target (prompt, plus committed outputs when resuming a preempted
+        request) starting at its ``prefill_pos``, appended to whatever the
+        cache already holds (cached prefix + earlier chunks) with per-row
+        RoPE offsets. Rows whose target completes sample their next token
+        from the same call and join the decode batch; the rest resume next
+        step, interleaved with decode (bounded TTFT impact on running
+        requests)."""
         rows = list(self.prefilling)
         if not rows:
             return 0, []
         b = len(rows)
         padded_b = _bucket(b, 1, self.max_batch)
-        chunk_lens = [min(self.prefill_chunk, len(r.prompt) - r.prefill_pos)
+        chunk_lens = [min(self.prefill_chunk,
+                          len(r.prefill_target) - r.prefill_pos)
                       for r in rows]
         lo = min(self.min_prefill_bucket, self.prefill_chunk)
         padded_c = _bucket(max(chunk_lens), lo, self.prefill_chunk)
@@ -582,7 +802,7 @@ class ServingEngine:
                 r.reserved_blocks -= r.cow_spare
                 self._reserved -= r.cow_spare
                 r.cow_spare = 0
-            toks[i, :c] = r.prompt[s0:s0 + c]
+            toks[i, :c] = r.prefill_target[s0:s0 + c]
             start[i] = s0
             num_new[i] = c
             temps[i] = r.sampling.temperature
@@ -595,8 +815,13 @@ class ServingEngine:
         keys = jnp.zeros((padded_b, 2), jnp.uint32)
         if not all_greedy:
             base = jnp.stack([r.base_key for r in rows])
-            keys = keys.at[:b].set(sampling_mod.batch_keys(
-                base, jnp.zeros((b,), jnp.int32)))
+            # the token sampled at prefill completion is output position
+            # len(output_tokens): 0 for a fresh request, the next committed
+            # slot for a preempted-resumed one — same key either way, so
+            # resume replays exactly what the uninterrupted run would draw
+            pos = jnp.asarray([len(r.output_tokens) for r in rows],
+                              jnp.int32)
+            keys = keys.at[:b].set(sampling_mod.batch_keys(base, pos))
         with self._mesh_ctx():
             fn = self._jit_prefill(padded_b, padded_c, all_greedy)
             tok, logits, self.kv.pools = fn(
@@ -606,10 +831,10 @@ class ServingEngine:
                 jnp.asarray(topps))
         self._sync(tok)
         tok = np.asarray(tok)
-        finished = []
+        events: List[StepEvent] = []
         for i, r in enumerate(rows):
             r.prefill_pos += chunk_lens[i]
-            if r.prefill_pos < len(r.prompt):
+            if r.prefill_pos < len(r.prefill_target):
                 continue                              # more chunks to go
             if self.prefix_cache:
                 self.kv.register_prefix(r.rid, r.prompt)
@@ -619,8 +844,11 @@ class ServingEngine:
             r.status = RUNNING
             self.running.append(r)
             reason = r.append(int(tok[i]))
+            events.append(StepEvent(kind=EVENT_TOKEN, rid=r.rid,
+                                    step=self._step_idx,
+                                    tokens=(int(tok[i]),)))
             if reason:
-                finished.append(self._finish(r, reason))
+                events.append(self._terminal_event(r, reason))
         computed = sum(chunk_lens)
         self.prefill_tokens_total += computed
-        return computed, finished
+        return computed, events

@@ -295,12 +295,30 @@ class PagedKVCache:
             else:
                 self._free.append(blk)
 
-    def free(self, rid: int) -> None:
+    def free(self, rid: int) -> Tuple[int, int]:
         """Release a request's references. Unregistered blocks return to the
         free list; registered ones park in the evictable LRU (still
-        matchable) once their last reference drops."""
+        matchable) once their last reference drops.
+
+        This is also the *preemption* primitive: evicting a running request
+        parks its registered full prompt blocks (resume re-matches them via
+        the prefix cache for free) while its suffix/scratch blocks go
+        straight back to the free list for the preemptor. Returns
+        ``(parked, freed)`` — blocks parked in the evictable LRU vs returned
+        to the free list (shared blocks still referenced elsewhere count in
+        neither)."""
+        parked = freed = 0
         for blk in self._tables.pop(rid):
             self._decref(blk)
+            if blk in self._lru:
+                parked += 1
+            elif self._ref[blk] == 0:
+                freed += 1
+        return parked, freed
+
+    def __contains__(self, rid: int) -> bool:
+        """Whether ``rid`` currently owns a block table."""
+        return rid in self._tables
 
     def truncate(self, rid: int, keep_blocks: int) -> int:
         """Shrink a request's table to its first ``keep_blocks`` blocks,

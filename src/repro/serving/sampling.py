@@ -52,6 +52,24 @@ _SPEC_STREAM_BASE = 0x53504543                 # "SPEC"
 STREAM_DRAFT, STREAM_ACCEPT, STREAM_RESAMPLE = 0, 1, 2
 
 
+def request_base_key(master_key: jax.Array, rid: int,
+                     seed: Optional[int] = None) -> jax.Array:
+    """The base PRNG key for one request.
+
+    ``SamplingParams.seed`` set: the key is ``PRNGKey(seed)`` — a function
+    of the request alone, so identical seeded requests sample identically
+    regardless of arrival order, batch composition, or scheduler policy,
+    and a preempted-then-resumed request replays its remaining tokens
+    exactly (per-token keys are ``fold_in(base, num_generated)``, which
+    depends only on committed-output length — state a preemption preserves).
+    Unseeded: fold the engine master key by the submission-order rid, so
+    identical unseeded prompts still draw independently.
+    """
+    if seed is not None:
+        return jax.random.PRNGKey(seed)
+    return jax.random.fold_in(master_key, rid)
+
+
 def request_key(base_key: jax.Array, position: int) -> jax.Array:
     """The PRNG key for a request's ``position``-th generated token."""
     return jax.random.fold_in(base_key, position)

@@ -1,0 +1,121 @@
+"""End-to-end HTTP server smoke for CI (not a pytest module — run directly):
+
+  PYTHONPATH=src python tests/http_smoke.py [--tp N] [--port P]
+
+Starts ``python -m repro.launch.serve --http`` as a subprocess (on fake CPU
+devices when --tp > 1), waits for /healthz, streams one SSE completion to
+[DONE], starts a second stream and drops the connection mid-stream (the
+server must cancel the request), then sends SIGINT and asserts a clean
+shutdown (exit code 0, "clean shutdown" on stdout).
+"""
+import argparse
+import http.client
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+import urllib.request
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def wait_health(base, proc, timeout=180):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            raise SystemExit(f"server died early: rc={proc.returncode}\n"
+                             f"{proc.stdout.read()}")
+        try:
+            h = json.load(urllib.request.urlopen(base + "/healthz",
+                                                 timeout=2))
+            if h.get("ok"):
+                return
+        except OSError:
+            time.sleep(0.3)
+    raise SystemExit("server never became healthy")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--port", type=int, default=8377)
+    args = ap.parse_args()
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    if args.tp > 1:
+        env.setdefault("XLA_FLAGS",
+                       f"--xla_force_host_platform_device_count={args.tp}")
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", "paper-0.5b",
+           "--reduced", "--http", "--port", str(args.port),
+           "--prompt-len", "16", "--gen", "48", "--scheduler", "priority"]
+    if args.tp > 1:
+        cmd += ["--tp", str(args.tp)]
+    print("+", " ".join(cmd), flush=True)
+    proc = subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+    base = f"http://127.0.0.1:{args.port}"
+    try:
+        wait_health(base, proc)
+        print("healthz OK", flush=True)
+
+        # 1. stream one completion to [DONE]
+        prompt = list(range(1, 9))
+        conn = http.client.HTTPConnection("127.0.0.1", args.port, timeout=300)
+        conn.request("POST", "/v1/completions",
+                     body=json.dumps({"prompt": prompt, "max_tokens": 8,
+                                      "stream": True}),
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        assert resp.status == 200, resp.status
+        toks, done = [], False
+        while not done:
+            line = resp.fp.readline()
+            assert line, "stream ended without [DONE]"
+            if not line.startswith(b"data: "):
+                continue
+            payload = line.strip()[len(b"data: "):]
+            if payload == b"[DONE]":
+                done = True
+            else:
+                toks.extend(json.loads(payload)["choices"][0]["token_ids"])
+        conn.close()
+        assert len(toks) == 8, toks
+        print(f"SSE stream OK: {toks}", flush=True)
+
+        # 2. drop a second stream mid-flight -> server must cancel it
+        conn = http.client.HTTPConnection("127.0.0.1", args.port, timeout=300)
+        conn.request("POST", "/v1/completions",
+                     body=json.dumps({"prompt": prompt, "max_tokens": 48,
+                                      "stream": True}),
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        resp.fp.readline()                      # first bytes, then vanish
+        resp.close()
+        conn.close()
+        deadline = time.time() + 120
+        stats = {}
+        while time.time() < deadline:
+            stats = json.load(urllib.request.urlopen(base + "/v1/stats",
+                                                     timeout=5))
+            if stats.get("cancelled", 0) >= 1 and stats.get("running") == 0:
+                break
+            time.sleep(0.3)
+        assert stats.get("cancelled", 0) >= 1, \
+            f"disconnect never cancelled: {stats}"
+        print(f"disconnect->cancel OK: {stats}", flush=True)
+    finally:
+        if proc.poll() is None:
+            proc.send_signal(signal.SIGINT)
+    out, _ = proc.communicate(timeout=60)
+    print(out[-2000:], flush=True)
+    assert proc.returncode == 0, f"unclean exit: {proc.returncode}"
+    assert "clean shutdown" in out, "no clean-shutdown marker"
+    print("HTTP_SMOKE_OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

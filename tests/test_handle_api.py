@@ -1,0 +1,481 @@
+"""Handle/event serving API: streaming handles, StepEvents, cancellation at
+every lifecycle point, scheduler policies, and KV-preemption with resume.
+
+The acceptance bar: greedy outputs token-identical between the old
+``generate()`` shim and the handle/event API (spec decoding + prefix cache
+on); a preempted-then-resumed request produces the same tokens as an
+uninterrupted run; and cancellation/preemption churn leaves the KV pool
+invariant-clean with zero leaked blocks.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.models import lm
+from repro.serving import (EVENT_CANCEL, EVENT_FINISH, EVENT_PREEMPT,
+                           EVENT_TOKEN, FCFSScheduler, PriorityScheduler,
+                           SamplingParams, ServingEngine, SpecConfig,
+                           get_scheduler)
+
+BS = 4
+
+
+def _cfg():
+    base = get_config("paper-0.5b").reduced()
+    return dataclasses.replace(base, sparsity=dataclasses.replace(
+        base.sparsity, ffn_impl="dense"))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, n).tolist() for n in lens]
+
+
+def _static_ref(params, cfg, prompt, steps):
+    import jax.numpy as jnp
+    toks = generate(params, cfg, jnp.asarray([prompt], jnp.int32), steps,
+                    cache_len=len(prompt) + steps + 1)
+    return np.asarray(toks)[0, len(prompt):].tolist()
+
+
+def _drain(engine):
+    events = []
+    while engine.has_unfinished():
+        events.extend(engine.step())
+    return events
+
+
+def _assert_clean(engine):
+    engine.kv.check_invariants()
+    assert engine.kv.num_available == engine.kv.num_blocks - 1, \
+        "KV blocks leaked"
+    assert engine._reserved == 0, "reservation leaked"
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = _cfg()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+# --------------------------------------------------------------------------- #
+# handles + events
+# --------------------------------------------------------------------------- #
+
+def test_handle_streams_deltas_and_result(dense_model):
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [6, 9])
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32)
+    hs = [engine.submit(p, max_tokens=5, stream=True) for p in prompts]
+    assert all(h.status == "waiting" for h in hs)
+    streamed = {h.rid: [] for h in hs}
+    statuses = set()
+    while engine.has_unfinished():
+        engine.step()
+        for h in hs:
+            streamed[h.rid].extend(h.new_tokens())
+            statuses.add(h.status)
+    for h in hs:
+        out = h.result()
+        assert h.finished and out.finish_reason == "length"
+        assert streamed[h.rid] == out.token_ids == h.tokens
+        assert len(out.token_ids) == 5
+        # stream=True buffers this request's events on the handle
+        evs = h.events()
+        assert [e.kind for e in evs][-1] == EVENT_FINISH
+        toks = [t for e in evs if e.kind == EVENT_TOKEN for t in e.tokens]
+        assert toks == out.token_ids
+        assert h.events() == []                   # drained
+    assert "running" in statuses
+    _assert_clean(engine)
+
+
+def test_result_raises_in_flight_and_repr(dense_model):
+    params, cfg = dense_model
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32)
+    h = engine.submit(_prompts(cfg, [5])[0], max_tokens=3)
+    with pytest.raises(RuntimeError, match="still waiting"):
+        h.result()
+    assert f"rid={h.rid}" in repr(h)
+    _drain(engine)
+    assert h.result().token_ids == h.tokens
+
+
+def test_step_events_cover_every_committed_token(dense_model):
+    """Every output token appears in exactly one TOKEN event, in order,
+    and each terminal request emits exactly one FINISH event."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [5, 11, 7], seed=3)
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=4,
+                           max_seq_len=32, prefill_chunk=4,
+                           min_prefill_bucket=4)
+    hs = [engine.submit(p, max_tokens=4) for p in prompts]
+    events = _drain(engine)
+    for h in hs:
+        toks = [t for e in events
+                if e.rid == h.rid and e.kind == EVENT_TOKEN
+                for t in e.tokens]
+        assert toks == h.result().token_ids
+        fins = [e for e in events if e.rid == h.rid and e.kind == EVENT_FINISH]
+        assert len(fins) == 1 and fins[0].output.token_ids == toks
+    _assert_clean(engine)
+
+
+def test_generate_shim_matches_handle_loop_spec_and_prefix_cache(dense_model):
+    """The old generate() front door and the handle/event API are the same
+    engine path: greedy outputs token-identical with speculative decoding
+    and the prefix cache enabled."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [6, 13, 9], seed=7)
+    kw = dict(block_size=BS, max_batch=4, max_seq_len=32, prefill_chunk=8,
+              prefix_cache=True, spec=SpecConfig(k=2,
+                                                 draft_backend="tile_skip"))
+    shim = ServingEngine(params, cfg, **kw).generate(prompts, max_tokens=6)
+    engine = ServingEngine(params, cfg, **kw)
+    hs = [engine.submit(p, max_tokens=6) for p in prompts]
+    _drain(engine)
+    for h, o in zip(hs, shim):
+        assert h.result().token_ids == o.token_ids
+    _assert_clean(engine)
+
+
+# --------------------------------------------------------------------------- #
+# cancellation at every lifecycle point
+# --------------------------------------------------------------------------- #
+
+def test_cancel_queued_request(dense_model):
+    params, cfg = dense_model
+    p1, p2 = _prompts(cfg, [8, 6], seed=5)
+    # pool sized for one request: the second stays queued
+    engine = ServingEngine(params, cfg, block_size=BS, num_blocks=4,
+                           max_batch=2, max_seq_len=16)
+    ha = engine.submit(p1, max_tokens=4)
+    hb = engine.submit(p2, max_tokens=4)
+    engine.step()
+    assert hb.status == "waiting"
+    assert hb.cancel()
+    evs = engine.step()
+    assert [e.kind for e in evs if e.rid == hb.rid] == [EVENT_CANCEL]
+    assert hb.result().finish_reason == "cancelled"
+    assert hb.result().token_ids == []
+    engine.kv.check_invariants()
+    _drain(engine)
+    assert ha.result().finish_reason == "length"
+    _assert_clean(engine)
+
+
+def test_cancel_mid_chunked_prefill(dense_model):
+    params, cfg = dense_model
+    long_p, other = _prompts(cfg, [20, 6], seed=9)
+    ref = _static_ref(params, cfg, other, 4)
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=4,
+                           max_seq_len=32, prefill_chunk=4,
+                           min_prefill_bucket=4)
+    h = engine.submit(long_p, max_tokens=4)
+    ho = engine.submit(other, max_tokens=4)
+    engine.step()
+    assert h.status == "prefilling"          # 20-token prompt, 4-token chunks
+    assert h.cancel()
+    evs = engine.step()
+    assert any(e.kind == EVENT_CANCEL and e.rid == h.rid for e in evs)
+    assert h.result().finish_reason == "cancelled"
+    engine.kv.check_invariants()
+    _drain(engine)
+    assert ho.result().token_ids == ref, "cancel perturbed another request"
+    _assert_clean(engine)
+
+
+def test_cancel_mid_decode_keeps_partial_tokens(dense_model):
+    params, cfg = dense_model
+    prompt = _prompts(cfg, [6], seed=11)[0]
+    ref = _static_ref(params, cfg, prompt, 8)
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32)
+    h = engine.submit(prompt, max_tokens=8)
+    for _ in range(3):
+        engine.step()
+    assert h.status == "running" and len(h.tokens) >= 2
+    got_before = h.tokens
+    assert h.cancel()
+    engine.step()
+    out = h.result()
+    assert out.finish_reason == "cancelled"
+    assert out.token_ids == got_before == ref[:len(got_before)]
+    assert 0 < len(out.token_ids) < 8
+    _assert_clean(engine)
+
+
+def test_cancel_mid_spec_rollback_clean(dense_model):
+    """Cancelling a request in a speculating engine (flag lands between a
+    draft/verify step and the next) must free its scratch-rolled-back table
+    with the pool invariant-clean, while other spec rows keep decoding."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [6, 9], seed=13)
+    refs = [_static_ref(params, cfg, p, 8) for p in prompts]
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32,
+                           spec=SpecConfig(k=3, draft_backend="tile_skip"))
+    ha = engine.submit(prompts[0], max_tokens=8)
+    hb = engine.submit(prompts[1], max_tokens=8)
+    engine.step()
+    engine.step()                    # both rows have speculated at least once
+    assert ha.spec_drafted > 0
+    assert ha.cancel()
+    evs = engine.step()
+    assert any(e.kind == EVENT_CANCEL and e.rid == ha.rid for e in evs)
+    assert ha.result().token_ids == refs[0][:len(ha.result().token_ids)]
+    engine.kv.check_invariants()
+    _drain(engine)
+    assert hb.result().token_ids == refs[1]
+    _assert_clean(engine)
+
+
+def test_cancel_shared_prefix_cow_holder(dense_model):
+    """Cancel the request whose registered prompt blocks a second, fully
+    cached duplicate shares mid-flight: the shared blocks must survive for
+    the sharer (decref, not free), invariants clean throughout."""
+    params, cfg = dense_model
+    prompt = _prompts(cfg, [2 * BS], seed=15)[0]     # block-aligned prompt
+    ref = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                        max_seq_len=16,
+                        prefix_cache=False).generate([prompt],
+                                                     max_tokens=4)[0]
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=16)
+    ha = engine.submit(prompt, max_tokens=4)
+    engine.step()                    # A prefilled (blocks registered), decoding
+    hb = engine.submit(prompt, max_tokens=4)         # full prefix hit on A
+    engine.step()                                    # B admitted, COW resolved
+    assert hb.result if hb.finished else True
+    assert ha.cancel()
+    engine.step()
+    assert ha.result().finish_reason == "cancelled"
+    engine.kv.check_invariants()
+    _drain(engine)
+    assert hb.result().token_ids == ref.token_ids, \
+        "cancelling the prefix holder corrupted the sharer"
+    _assert_clean(engine)
+
+
+def test_cancel_terminal_and_unknown_is_noop(dense_model):
+    params, cfg = dense_model
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32)
+    h = engine.submit(_prompts(cfg, [5])[0], max_tokens=2)
+    _drain(engine)
+    assert not h.cancel()                    # already finished: output stands
+    assert h.result().finish_reason == "length"
+    assert not engine.cancel(10_000)         # unknown rid
+    _assert_clean(engine)
+
+
+def test_cancel_churn_many_lifecycle_points(dense_model):
+    """Cancellation storm across a staggered workload — every few steps a
+    random in-flight request is cancelled; the pool must stay
+    invariant-clean at every step and fully drain."""
+    params, cfg = dense_model
+    rng = np.random.RandomState(17)
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=4,
+                           max_seq_len=32, prefill_chunk=4,
+                           min_prefill_bucket=4,
+                           spec=SpecConfig(k=2, draft_backend="tile_skip"))
+    handles = []
+    pending = [_prompts(cfg, [ln], seed=100 + i)[0]
+               for i, ln in enumerate([6, 18, 9, 14, 5, 11, 7, 16])]
+    step = 0
+    while pending or engine.has_unfinished():
+        if pending and step % 2 == 0:
+            handles.append(engine.submit(pending.pop(0), max_tokens=6))
+        live = [h for h in handles if not h.finished]
+        if live and step % 3 == 2:
+            engine.cancel(live[int(rng.randint(len(live)))])
+        engine.step()
+        engine.kv.check_invariants()
+        step += 1
+    assert any(h.result().finish_reason == "cancelled" for h in handles)
+    assert any(h.result().finish_reason == "length" for h in handles)
+    _assert_clean(engine)
+
+
+# --------------------------------------------------------------------------- #
+# scheduler policies + preemption
+# --------------------------------------------------------------------------- #
+
+def test_scheduler_factory_and_validation():
+    assert isinstance(get_scheduler("fcfs"), FCFSScheduler)
+    assert isinstance(get_scheduler("priority"), PriorityScheduler)
+    s = PriorityScheduler()
+    assert get_scheduler(s) is s
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        get_scheduler("sjf")
+
+
+def test_priority_admission_order(dense_model):
+    """With one batch slot, a later-submitted high-priority request is
+    admitted before earlier low-priority ones."""
+    params, cfg = dense_model
+    p = _prompts(cfg, [5, 6, 7], seed=19)
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=1,
+                           max_seq_len=16, scheduler="priority")
+    lo1 = engine.submit(p[0], max_tokens=2, priority=0)
+    lo2 = engine.submit(p[1], max_tokens=2, priority=0)
+    hi = engine.submit(p[2], max_tokens=2, priority=1)
+    order = [e.rid for e in _drain(engine) if e.kind == EVENT_FINISH]
+    assert order.index(hi.rid) == 0, f"high tier not served first: {order}"
+    assert order.index(lo1.rid) < order.index(lo2.rid)   # FIFO within tier
+    _assert_clean(engine)
+
+
+def test_preempt_resume_token_identity_greedy(dense_model):
+    """Under a pool sized for one request, a high-priority arrival preempts
+    the running low-priority request; the victim resumes via re-prefill
+    (prompt + committed tokens) and its final output is token-identical to
+    an uninterrupted run."""
+    params, cfg = dense_model
+    lo_p, hi_p = _prompts(cfg, [8, 8], seed=21)
+    ref_lo = _static_ref(params, cfg, lo_p, 6)
+    ref_hi = _static_ref(params, cfg, hi_p, 4)
+    # 5 usable blocks: lo (4 worst-case) + hi (3) cannot coexist -> preempt;
+    # but hi's 3 come off the free list after the preempt, so lo's 2 parked
+    # prompt blocks survive in the LRU for a cache-hit resume
+    engine = ServingEngine(params, cfg, block_size=BS, num_blocks=6,
+                           max_batch=2, max_seq_len=16, scheduler="priority")
+    lo = engine.submit(lo_p, max_tokens=6, priority=0)
+    for _ in range(3):
+        engine.step()
+    assert lo.status == "running" and len(lo.tokens) >= 1
+    before = lo.tokens
+    hi = engine.submit(hi_p, max_tokens=4, priority=1)
+    events = _drain(engine)
+    pre = [e for e in events if e.kind == EVENT_PREEMPT]
+    assert [e.rid for e in pre] == [lo.rid], "low-priority row not preempted"
+    assert lo.result().num_preemptions == 1
+    assert lo.tokens[:len(before)] == before, "committed tokens regressed"
+    assert lo.result().token_ids == ref_lo, \
+        "preempt/resume diverged from the uninterrupted run"
+    assert hi.result().token_ids == ref_hi
+    assert hi.result().num_preemptions == 0
+    # the preempted request resumed via the prefix cache: its re-admission
+    # matched the registered prompt blocks parked at preemption
+    assert lo.result().cached_prefix_tokens > 0
+    _assert_clean(engine)
+
+
+def test_preempt_resume_token_identity_seeded_stochastic(dense_model):
+    """Seeded stochastic sampling replays identically across a preemption:
+    per-token keys depend only on (seed, output position), both preserved."""
+    params, cfg = dense_model
+    lo_p, hi_p = _prompts(cfg, [8, 8], seed=23)
+    sp = SamplingParams(temperature=0.9, top_k=32, seed=77)
+    solo = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                         max_seq_len=16, seed=5).generate(
+        [lo_p], sampling=sp, max_tokens=6)[0]
+    engine = ServingEngine(params, cfg, block_size=BS, num_blocks=5,
+                           max_batch=2, max_seq_len=16, seed=6,
+                           scheduler="priority")
+    lo = engine.submit(lo_p, sampling=sp, max_tokens=6, priority=0)
+    for _ in range(3):
+        engine.step()
+    hi = engine.submit(hi_p, sampling=sp, max_tokens=4, priority=1)
+    events = _drain(engine)
+    assert any(e.kind == EVENT_PREEMPT for e in events)
+    assert lo.result().num_preemptions >= 1
+    assert lo.result().token_ids == solo.token_ids, \
+        "seeded stochastic preempt/resume diverged"
+    assert hi.finished
+    _assert_clean(engine)
+
+
+def test_fcfs_never_preempts_same_workload(dense_model):
+    """The FCFS engine defers instead of preempting on the exact workload
+    that makes the priority engine preempt — and both produce identical
+    greedy tokens (policy changes latency, never content)."""
+    params, cfg = dense_model
+    lo_p, hi_p = _prompts(cfg, [8, 8], seed=25)
+
+    def run(policy):
+        engine = ServingEngine(params, cfg, block_size=BS, num_blocks=5,
+                               max_batch=2, max_seq_len=16, scheduler=policy)
+        lo = engine.submit(lo_p, max_tokens=6, priority=0)
+        for _ in range(3):
+            engine.step()
+        hi = engine.submit(hi_p, max_tokens=4, priority=1)
+        events = _drain(engine)
+        _assert_clean(engine)
+        n_pre = sum(1 for e in events if e.kind == EVENT_PREEMPT)
+        return lo.result().token_ids, hi.result().token_ids, n_pre
+
+    lo_f, hi_f, pre_f = run("fcfs")
+    lo_p_, hi_p_, pre_p = run("priority")
+    assert pre_f == 0 and pre_p >= 1
+    assert lo_f == lo_p_ and hi_f == hi_p_
+
+
+def test_preemption_spec_engine_resumes_clean(dense_model):
+    """Preemption composes with speculative decoding: the victim has spec
+    scratch/rollback state, resumes, and still matches non-spec greedy."""
+    params, cfg = dense_model
+    lo_p, hi_p = _prompts(cfg, [8, 8], seed=27)
+    # spec commits up to k+1 tokens per step: give the victim enough budget
+    # that it is still mid-decode when the high-priority request lands
+    ref = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                        max_seq_len=20).generate([lo_p], max_tokens=10)[0]
+    engine = ServingEngine(params, cfg, block_size=BS, num_blocks=7,
+                           max_batch=2, max_seq_len=20, scheduler="priority",
+                           spec=SpecConfig(k=2, draft_backend="tile_skip"))
+    lo = engine.submit(lo_p, max_tokens=10, priority=0)
+    for _ in range(2):
+        engine.step()
+    assert not lo.finished
+    hi = engine.submit(hi_p, max_tokens=4, priority=1)
+    events = _drain(engine)
+    assert any(e.kind == EVENT_PREEMPT for e in events)
+    assert lo.result().token_ids == ref.token_ids
+    assert hi.finished
+    _assert_clean(engine)
+
+
+# --------------------------------------------------------------------------- #
+# per-request seed (arrival-order independence)
+# --------------------------------------------------------------------------- #
+
+def test_seeded_requests_identical_across_arrival_order(dense_model):
+    """Two engines submit the same seeded stochastic request at different
+    queue positions (and under different engine master seeds): outputs must
+    be identical — the seed, not engine arrival order, keys the PRNG."""
+    params, cfg = dense_model
+    target, filler = _prompts(cfg, [7, 9], seed=29)
+    sp = SamplingParams(temperature=1.0, top_k=16, seed=123)
+
+    def run(order, engine_seed):
+        engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                               max_seq_len=32, seed=engine_seed)
+        hs = {}
+        for tag in order:
+            if tag == "t":
+                hs["t"] = engine.submit(target, sampling=sp, max_tokens=6)
+            else:
+                engine.submit(filler, sampling=SamplingParams(
+                    temperature=0.8, seed=9), max_tokens=6)
+        _drain(engine)
+        return hs["t"].result().token_ids
+
+    assert run("tf", 1) == run("ft", 2) == run("t", 3)
+
+
+def test_unseeded_identical_prompts_draw_independently(dense_model):
+    params, cfg = dense_model
+    prompt = _prompts(cfg, [7], seed=31)[0]
+    sp = SamplingParams(temperature=1.0)
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32)
+    outs = engine.generate([prompt, prompt], sampling=sp, max_tokens=8)
+    assert outs[0].token_ids != outs[1].token_ids, \
+        "unseeded duplicates must not replay each other's draws"

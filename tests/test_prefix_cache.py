@@ -15,7 +15,7 @@ from repro.configs import get_config
 from repro.launch.serve import generate
 from repro.models import lm
 from repro.serving import (PagedKVCache, SamplingParams, ServingEngine,
-                           make_draft_pair)
+                           finished_outputs, make_draft_pair)
 
 BS = 4  # block size used throughout
 
@@ -38,7 +38,7 @@ def _static_ref(params, cfg, prompt, steps):
 def _drain(engine):
     outs = {}
     while engine.has_unfinished():
-        for o in engine.step():
+        for o in finished_outputs(engine.step()):
             outs[o.rid] = o
     return outs
 
@@ -310,7 +310,7 @@ def test_chunked_prefill_greedy_equivalence_staggered(dense_model):
     outs = {}
     engine.add_request(prompts[0], max_tokens=5)
     for _ in range(2):
-        for o in engine.step():
+        for o in finished_outputs(engine.step()):
             outs[o.rid] = o
     for p in prompts[1:]:                        # join mid-flight
         engine.add_request(p, max_tokens=5)

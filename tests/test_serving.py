@@ -12,7 +12,7 @@ from repro.configs import get_config
 from repro.launch.serve import generate
 from repro.models import lm
 from repro.serving import (PagedKVCache, SamplingParams, ServingEngine,
-                           get_backend, sample_tokens)
+                           finished_outputs, get_backend, sample_tokens)
 from repro.serving.backends import DECODE, PREFILL
 
 
@@ -191,12 +191,12 @@ def test_engine_staggered_arrival_continuous_batching(dense_model):
     for p in prompts[:2]:
         engine.add_request(p, max_tokens=5)
     for _ in range(2):
-        for o in engine.step():
+        for o in finished_outputs(engine.step()):
             outs[o.rid] = o
     for p in prompts[2:]:                       # join-on-arrival mid-flight
         engine.add_request(p, max_tokens=5)
     while engine.has_unfinished():
-        for o in engine.step():
+        for o in finished_outputs(engine.step()):
             outs[o.rid] = o
     for rid, ref in enumerate(refs):
         assert outs[rid].token_ids == ref
@@ -246,7 +246,7 @@ def test_engine_admission_defers_when_pool_full(dense_model):
         engine.add_request(p, max_tokens=4)
     saw_deferred = False
     while engine.has_unfinished():
-        for o in engine.step():
+        for o in finished_outputs(engine.step()):
             outs[o.rid] = o
         saw_deferred |= bool(engine.stats[-1].waiting_after
                              and engine.stats[-1].running_after)

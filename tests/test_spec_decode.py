@@ -15,7 +15,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import lm
 from repro.serving import (PagedKVCache, SamplingParams, ServingEngine,
-                           SpecConfig, make_draft_pair)
+                           SpecConfig, finished_outputs, make_draft_pair)
 from repro.serving.spec.verifier import Verifier
 from repro.serving.request import Request
 
@@ -41,7 +41,7 @@ def dense_model():
 def _drain(engine):
     outs = {}
     while engine.has_unfinished():
-        for o in engine.step():
+        for o in finished_outputs(engine.step()):
             outs[o.rid] = o
     return outs
 

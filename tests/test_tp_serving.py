@@ -102,7 +102,8 @@ import jax, numpy as np
 from repro.configs import get_config
 from repro.distributed.sharding import make_serving_mesh
 from repro.models import lm
-from repro.serving import ServingEngine, SpecConfig
+from repro.serving import (EVENT_TOKEN, ServingEngine, SpecConfig,
+                           finished_outputs)
 
 cfg = get_config('paper-0.5b').reduced()
 params = lm.init(jax.random.PRNGKey(0), cfg)
@@ -120,15 +121,23 @@ def run(mesh, backend, tp_label):
                         max_batch=4, max_seq_len=48, prefill_chunk=8,
                         spec=SpecConfig(k=2, draft_backend='tile_skip',
                                         draft_threshold=0.05), mesh=mesh)
-    outs, pending, step = {{}}, list(work), 0
+    # drive through the handle/event API: handles submitted staggered, token
+    # deltas accumulated from TOKEN events and cross-checked vs the handle
+    handles, streamed, pending, step = {{}}, {{}}, list(work), 0
     while pending or eng.has_unfinished():
         while pending and pending[0][0] <= step:
             _, p, mt = pending.pop(0)
-            eng.add_request(p, max_tokens=mt)
-        for o in eng.step():
-            outs[o.rid] = o
+            h = eng.submit(p, max_tokens=mt)
+            handles[h.rid] = h
+            streamed[h.rid] = []
+        for ev in eng.step():
+            if ev.kind == EVENT_TOKEN:
+                streamed[ev.rid].extend(ev.tokens)
         step += 1
     eng.kv.check_invariants()
+    outs = {{r: h.result() for r, h in handles.items()}}
+    for r, h in handles.items():
+        assert streamed[r] == outs[r].token_ids, 'events != terminal output'
     return {{r: o.token_ids for r, o in outs.items()}}, eng
 
 for backend in {backends}:
@@ -139,6 +148,20 @@ for backend in {backends}:
         assert eng.kv.cow_count >= 1, 'fully-cached prompt never hit COW'
         assert any(s.spec_drafted for s in eng.stats), 'spec never ran'
         assert eng.cached_tokens_total > 0, 'prefix cache never hit'
+
+# old generate() shim vs handle/event API under the mesh: same engine
+# config, spec + prefix cache on — outputs must be token-identical
+mesh = make_serving_mesh({tps}[0])
+kw = dict(backend={backends}[0], block_size=4, max_batch=4, max_seq_len=48,
+          prefill_chunk=8, spec=SpecConfig(k=2, draft_backend='tile_skip'))
+shim = [o.token_ids for o in
+        ServingEngine(params, cfg, mesh=mesh, **kw).generate([A, D],
+                                                             max_tokens=6)]
+eng = ServingEngine(params, cfg, mesh=mesh, **kw)
+hs = [eng.submit(p, max_tokens=6) for p in (A, D)]
+while eng.has_unfinished():
+    eng.step()
+assert [h.result().token_ids for h in hs] == shim, 'shim != handle API'
 print('TP_IDENTITY_OK')
 """
 
