@@ -44,7 +44,7 @@ from repro.configs import get_config
 from repro.distributed.sharding import make_serving_mesh
 from repro.models import lm
 from repro.serving import (EVENT_TOKEN, SamplingParams, ServingEngine,
-                           SpecConfig, finished_outputs)
+                           SpecConfig, Telemetry, finished_outputs)
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -188,12 +188,15 @@ def run_churn(params, cfg, work, *, backend: str, scheduler: str,
 
 def run_backend(params, cfg, backend: str, work, *, block_size: int,
                 max_batch: int, max_seq_len: int, prefix_cache: bool = True,
-                prefill_chunk: int = 64, mesh=None, spec=None):
+                prefill_chunk: int = 64, mesh=None, spec=None,
+                telemetry: bool = False, trace_out=None):
     engine = ServingEngine(params, cfg, backend=backend,
                            block_size=block_size, max_batch=max_batch,
                            max_seq_len=max_seq_len,
                            prefix_cache=prefix_cache,
-                           prefill_chunk=prefill_chunk, mesh=mesh, spec=spec)
+                           prefill_chunk=prefill_chunk, mesh=mesh, spec=spec,
+                           telemetry=Telemetry() if telemetry or trace_out
+                           else None)
 
     def reset_cache():
         # measured run starts from a cold cache so hit rates reflect sharing
@@ -236,7 +239,16 @@ def run_backend(params, cfg, backend: str, work, *, block_size: int,
     prompt_toks = engine.prompt_tokens_total
     step_wall = np.array([s.wall_ms for s in engine.stats])
     step_sync = np.array([s.sync_ms for s in engine.stats])
+    telemetry_summary = None
+    if engine.telemetry is not None:
+        # covers warmup + measured replays (jit compile counts only make
+        # sense over both; the steady-state numbers live in step_* fields)
+        telemetry_summary = engine.telemetry.summary()
+        if trace_out:
+            engine.export_trace(trace_out)
+            print(f"# {backend} chrome trace -> {trace_out}")
     return {"backend": backend, "wall": wall, "tokens": total,
+            "telemetry": telemetry_summary,
             "toks_per_s": total / wall, "ttft_mean_ms": ttfts.mean() * 1e3,
             "ttft_p90_ms": float(np.percentile(ttfts, 90)) * 1e3,
             "steps": len(engine.stats), "composition": comp,
@@ -283,6 +295,9 @@ def main(argv=None):
                     help="tensor-parallel degree (shard params + paged KV "
                          "pools over a 1-D mesh; needs >= tp devices, e.g. "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write a Chrome-trace JSON of the telemetry-on "
+                         "replay (open in chrome://tracing); '' = skip")
     args = ap.parse_args(argv)
     if args.smoke:
         args.num_requests = 2
@@ -327,12 +342,43 @@ def main(argv=None):
             "batch composition never changed — not continuous batching"
     print("# composition varies across steps: continuous batching confirmed")
 
+    # ---- telemetry: on-vs-off parity + overhead + phase breakdown ---------
+    # same workload through the first backend with the full telemetry
+    # subsystem on (metrics + request tracing): greedy outputs must be
+    # token-identical to the telemetry-off run above. The off run IS the
+    # pre-telemetry engine path (instrumentation is skipped entirely), so
+    # the reported overhead is what turning the subsystem on costs; with
+    # sub-ms steps on shared CPU it is noise-dominated — informative only.
+    backend0 = args.backends.split(",")[0].strip()
+    tm_run = run_backend(params, cfg, backend0, work,
+                         block_size=args.block_size,
+                         max_batch=args.max_batch, max_seq_len=max_seq_len,
+                         prefill_chunk=args.prefill_chunk, mesh=mesh,
+                         telemetry=True, trace_out=args.trace_out or None)
+    base = results[0]
+    assert tm_run["outputs"] == base["outputs"], \
+        "telemetry changed greedy outputs"
+    overhead = tm_run["step_wall_ms_mean"] / base["step_wall_ms_mean"] - 1
+    tm = tm_run["telemetry"]
+    print(f"# telemetry on-vs-off ({backend0}): outputs identical, step "
+          f"wall {base['step_wall_ms_mean']:.2f} -> "
+          f"{tm_run['step_wall_ms_mean']:.2f}ms mean "
+          f"({overhead:+.1%} overhead)")
+    print("# telemetry phase ms/step: " + ", ".join(
+        f"{k}={v:.2f}" for k, v in sorted(tm["phases_ms_mean"].items())))
+    for name in ("ttft_s", "itl_s"):
+        for tier, snap in sorted(tm[name].items()):
+            if snap["count"]:
+                print(f"# telemetry {name} prio={tier}: n={snap['count']} "
+                      f"mean={snap['sum'] / snap['count'] * 1e3:.1f}ms")
+    print(f"# telemetry: {int(tm['tokens_generated'])} tokens over "
+          f"{int(tm['steps'])} steps, {tm['trace_events']} trace events")
+
     # ---- shared-system-prompt workload: prefix caching on vs off ----------
     shared = make_shared_prefix_workload(args.shared_prefix_requests,
                                          cfg.vocab_size, args.seed)
     shared_seq = max(len(p) + m for _, p, m in shared)
     shared_seq = -(-shared_seq // args.block_size) * args.block_size
-    backend0 = args.backends.split(",")[0].strip()
     cache_runs = {}
     for on in (False, True):
         cache_runs[on] = run_backend(
@@ -441,6 +487,14 @@ def main(argv=None):
             "smoke": args.smoke,
             "tp": args.tp,
             "tp_identity": tp_identity,
+            "telemetry": {
+                "backend": backend0,
+                "outputs_identical": True,
+                "step_wall_ms_mean_off": base["step_wall_ms_mean"],
+                "step_wall_ms_mean_on": tm_run["step_wall_ms_mean"],
+                "step_wall_overhead_frac": overhead,
+                "summary": tm,
+            },
             "results": [trim(r) for r in results],
             "churn": {k: v for k, v in churn.items() if k != "outputs"},
             "scheduler_identity": {

@@ -29,15 +29,19 @@ from bench_serving import REPO_ROOT, make_workload, write_bench_json
 from repro.configs import get_config
 from repro.models import lm
 from repro.serving import (SamplingParams, ServingEngine, SpecConfig,
-                           finished_outputs)
+                           Telemetry, finished_outputs)
 
 
 def run_mode(params, cfg, work, *, backend: str, spec, block_size: int,
              max_batch: int, max_seq_len: int, label: str):
     def build():
+        # telemetry on for every mode (baseline included) so the
+        # draft/verify/sample phase split and the per-step acceptance
+        # histogram land in the bench record with uniform instrumentation
         return ServingEngine(params, cfg, backend=backend,
                              block_size=block_size, max_batch=max_batch,
-                             max_seq_len=max_seq_len, spec=spec)
+                             max_seq_len=max_seq_len, spec=spec,
+                             telemetry=Telemetry(trace=False))
 
     def replay(engine):
         outs = {}
@@ -63,6 +67,7 @@ def run_mode(params, cfg, work, *, backend: str, spec, block_size: int,
     drafted = sum(o.spec_drafted for o in outs.values())
     accepted = sum(o.spec_accepted for o in outs.values())
     steps = len(engine.stats)
+    tm = engine.telemetry.summary()
     return {
         "mode": label,
         "k": 0 if spec is None else spec.k,
@@ -71,6 +76,9 @@ def run_mode(params, cfg, work, *, backend: str, spec, block_size: int,
         "steps": steps, "toks_per_step": total / max(steps, 1),
         "drafted": drafted, "accepted": accepted,
         "acceptance_rate": accepted / drafted if drafted else None,
+        "phases_ms_mean": tm["phases_ms_mean"],
+        "spec_acceptance_hist": tm["spec_acceptance_hist"],
+        "jit_compiles": tm["jit_compiles"],
     }, outs
 
 
@@ -141,6 +149,9 @@ def main(argv=None):
             assert got == rows, \
                 f"spec-k{k}-t{thr} diverged from non-speculative greedy"
     print("# greedy spec output token-identical to non-spec: confirmed")
+    for r in results:
+        print(f"# {r['mode']} phase ms/step: " + ", ".join(
+            f"{k}={v:.2f}" for k, v in sorted(r["phases_ms_mean"].items())))
 
     if args.json_out:
         write_bench_json(args.json_out, {

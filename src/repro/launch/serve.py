@@ -120,6 +120,24 @@ def main(argv=None):
                          "(/v1/completions with SSE streaming; client "
                          "disconnect cancels the request) instead of "
                          "running the one-shot batch demo")
+    ap.add_argument("--metrics", dest="metrics", action="store_true",
+                    default=None,
+                    help="enable the telemetry subsystem (metrics registry "
+                         "+ request tracing); default: on with --http "
+                         "(serving GET /metrics), off for the batch demo")
+    ap.add_argument("--no-metrics", dest="metrics", action="store_false",
+                    help="disable telemetry even with --http "
+                         "(GET /metrics then returns 503)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the run (engine step "
+                         "phases + one track per request; open in "
+                         "chrome://tracing or ui.perfetto.dev). Batch mode "
+                         "exports after generation; --http exports at "
+                         "shutdown. Implies --metrics.")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="also run jax.profiler over the generation / "
+                         "serving window, writing an XLA-level device "
+                         "trace to DIR (view with TensorBoard or Perfetto)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8000,
                     help="HTTP port (0 = pick a free port; the chosen one "
@@ -168,7 +186,8 @@ def main(argv=None):
         return toks
 
     from repro.distributed.sharding import make_serving_mesh
-    from repro.serving import SamplingParams, ServingEngine, SpecConfig
+    from repro.serving import (SamplingParams, ServingEngine, SpecConfig,
+                               Telemetry, jax_profiler)
     spec = None
     if args.spec_k:
         spec = SpecConfig(k=args.spec_k, draft_backend=args.draft_backend,
@@ -178,15 +197,22 @@ def main(argv=None):
         mesh = make_serving_mesh(args.tp)
         print(f"[serve/engine] tensor-parallel mesh: tp={args.tp} over "
               f"{[str(d) for d in mesh.devices.flat]}")
+    # telemetry defaults: on when serving HTTP (scrapeable /metrics), off
+    # for the one-shot batch demo; --metrics/--trace-out force it on
+    use_telemetry = args.metrics
+    if use_telemetry is None:
+        use_telemetry = args.http
+    if args.trace_out:
+        use_telemetry = True
+    telemetry = Telemetry(trace=bool(args.trace_out) or args.http) \
+        if use_telemetry else None
     engine = ServingEngine(
         params, cfg, backend=args.ffn_impl, block_size=args.block_size,
         max_batch=args.max_batch or args.batch,
         max_seq_len=args.prompt_len + args.gen, seed=args.seed, spec=spec,
         prefix_cache=not args.no_prefix_cache,
         prefill_chunk=args.prefill_chunk, scheduler=args.scheduler,
-        # the HTTP server runs indefinitely: bound the per-step stats tail
-        # (totals never truncate; batch mode keeps full traces)
-        max_stats=4096 if args.http else None, mesh=mesh)
+        telemetry=telemetry, mesh=mesh)
 
     if args.http:
         import signal
@@ -202,14 +228,20 @@ def main(argv=None):
         signal.signal(signal.SIGTERM, _sig)
         print(f"[serve/http] listening on http://{server.host}:{server.port} "
               f"(backend={args.ffn_impl}, scheduler={args.scheduler}, "
-              f"tp={args.tp}; POST /v1/completions, GET /healthz)",
+              f"tp={args.tp}; POST /v1/completions, GET /healthz"
+              + (", GET /metrics" if use_telemetry else "") + ")",
               flush=True)
-        try:
-            while not stop["flag"]:
-                time.sleep(0.1)
-        except KeyboardInterrupt:
-            pass
-        server.shutdown()
+        with jax_profiler(args.jax_profile):
+            try:
+                while not stop["flag"]:
+                    time.sleep(0.1)
+            except KeyboardInterrupt:
+                pass
+            server.shutdown()
+        if args.trace_out:
+            engine.export_trace(args.trace_out)
+            print(f"[serve/http] chrome trace -> {args.trace_out}",
+                  flush=True)
         print("[serve/http] clean shutdown", flush=True)
         return None
     # no per-request seed: each request derives its own key from the engine
@@ -217,9 +249,10 @@ def main(argv=None):
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p)
     t0 = time.time()
-    outs = engine.generate([np.asarray(prompt[i]).tolist()
-                            for i in range(args.batch)],
-                           sampling=sp, max_tokens=args.gen)
+    with jax_profiler(args.jax_profile):
+        outs = engine.generate([np.asarray(prompt[i]).tolist()
+                                for i in range(args.batch)],
+                               sampling=sp, max_tokens=args.gen)
     dt = time.time() - t0
     total_new = sum(len(o.token_ids) for o in outs)
     ttft = [o.ttft for o in outs]
@@ -242,6 +275,14 @@ def main(argv=None):
               f"acceptance={accepted}/{drafted} "
               f"({accepted / max(drafted, 1):.1%}), "
               f"{total_new / max(steps, 1):.2f} tok/step over {steps} steps")
+    if engine.telemetry is not None:
+        phases = engine.telemetry.phase_ms_mean()
+        if phases:
+            print("[serve/engine] phase ms/step: " + ", ".join(
+                f"{k}={v:.2f}" for k, v in sorted(phases.items())))
+    if args.trace_out:
+        engine.export_trace(args.trace_out)
+        print(f"[serve/engine] chrome trace -> {args.trace_out}")
     print(toks[:, :16])
 
     if args.temperature <= 0 and (args.check_static or args.reduced):

@@ -35,7 +35,16 @@ Subsystem layout:
                  ``DraftPair`` draft/verify pairs for speculative decoding.
   server.py    — ``ServingServer``: OpenAI-style HTTP front end
                  (``/v1/completions`` with SSE streaming; client disconnect
-                 cancels the request) over one engine thread.
+                 cancels the request; Prometheus-text ``GET /metrics``)
+                 over one engine thread.
+  telemetry.py — zero-dependency metrics registry (counters / gauges /
+                 fixed-bucket histograms, thread-safe, no-op when disabled)
+                 + the serving metric catalog + the ``Telemetry`` facade of
+                 lifecycle hooks the engine publishes through.
+  trace.py     — per-request lifecycle spans (QUEUED→PREFILL→DECODE→…,
+                 preempt/resume, spec accept/reject) surfaced on
+                 ``RequestOutput.spans``, the engine phase timeline, and
+                 Chrome-trace JSON export; optional ``jax_profiler`` hook.
   spec/        — self-speculative decoding: ``SpecConfig``, the tile-skip
                  ``Drafter``, the trusted-path ``Verifier`` (exact rejection
                  sampling), and KV ``rollback``.
@@ -52,6 +61,11 @@ from repro.serving.sampling import (SamplingParams, filter_logits,
 from repro.serving.scheduler import (FCFSScheduler, PriorityScheduler,
                                      Scheduler, get_scheduler)
 from repro.serving.spec import SpecConfig
+from repro.serving.telemetry import (Counter, Gauge, Histogram,
+                                     MetricsRegistry, ServingMetrics,
+                                     Telemetry)
+from repro.serving.trace import (SpanEvent, TraceRecorder, jax_profiler,
+                                 span_names)
 
 __all__ = [
     "ServingEngine", "StepStats", "PagedKVCache", "Request", "RequestOutput",
@@ -60,4 +74,6 @@ __all__ = [
     "Scheduler", "FCFSScheduler", "PriorityScheduler", "get_scheduler",
     "SamplingParams", "sample_tokens", "filter_logits", "ServingBackend",
     "get_backend", "DraftPair", "make_draft_pair", "SpecConfig",
+    "Telemetry", "MetricsRegistry", "ServingMetrics", "Counter", "Gauge",
+    "Histogram", "SpanEvent", "TraceRecorder", "span_names", "jax_profiler",
 ]

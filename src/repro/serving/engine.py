@@ -63,6 +63,15 @@ HTTP front end may submit from handler threads while a single engine thread
 drives ``step()``. ``cancel`` is lock-free — it only flags the request
 (atomic under the GIL; processed at the next step) — so it never waits out
 a step's device work.
+
+Observability: ``ServingEngine(..., telemetry=True)`` publishes per-phase
+step timings, KV occupancy, prefix-cache and speculative counters, TTFT /
+inter-token latency histograms, and JIT compile-event counts into a
+``telemetry.MetricsRegistry`` (Prometheus text via ``GET /metrics`` on the
+HTTP server), and records per-request lifecycle spans + a whole-engine
+step timeline exportable as Chrome-trace JSON (``engine.export_trace``).
+Telemetry off (the default) is a few ``is None`` checks per step — the
+token stream is identical either way. See docs/observability.md.
 """
 from __future__ import annotations
 
@@ -93,6 +102,10 @@ from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Scheduler, get_scheduler
 from repro.serving.spec import (Drafter, SpecConfig, Verifier,
                                 rollback_after_verify)
+from repro.serving.telemetry import (PHASE_ADMISSION, PHASE_CANCEL,
+                                     PHASE_DECODE, PHASE_DRAFT,
+                                     PHASE_PREFILL, PHASE_SAMPLE,
+                                     PHASE_VERIFY, Telemetry)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,7 +156,8 @@ class ServingEngine:
                  spec: Optional[SpecConfig] = None,
                  prefix_cache: bool = True, prefill_chunk: int = 64,
                  scheduler: Union[str, Scheduler] = "fcfs",
-                 max_stats: Optional[int] = None, mesh=None):
+                 max_stats: Optional[int] = 4096, mesh=None,
+                 telemetry: Union[bool, Telemetry, None] = False):
         self.backend = get_backend(backend)
         self.cfg = cfg
         self.cfg_prefill = self.backend.configure(cfg, PREFILL)
@@ -192,6 +206,22 @@ class ServingEngine:
                 mesh, self._param_shardings, self.kv.pool_shardings, 4, 1)
         self.table_width = -(-max_seq_len // block_size)
         self.scheduler: Scheduler = get_scheduler(scheduler)
+        # observability: metrics registry + span tracing (telemetry=True
+        # builds a default Telemetry; pass an instance to share a registry
+        # across engines; False/None = zero instrumentation on the hot path)
+        if telemetry is True:
+            telemetry = Telemetry()
+        elif telemetry is False:
+            telemetry = None
+        self.telemetry: Optional[Telemetry] = telemetry
+        if telemetry is not None:
+            telemetry.metrics.build_info.set(
+                1, backend=self.backend.name, scheduler=self.scheduler.name,
+                spec_k=str(0 if spec is None else spec.k),
+                tp=str(1 if mesh is None else mesh.devices.size))
+            if spec is not None:
+                self.drafter.on_compile = telemetry.on_compile
+                self.verifier.on_compile = telemetry.on_compile
         self.prefilling: List[Request] = []
         self.running: List[Request] = []
         self.stats: List[StepStats] = []
@@ -202,9 +232,11 @@ class ServingEngine:
         self.cancelled_total = 0           # requests aborted via cancel()
         self.preempted_total = 0           # scheduler evictions (resumes)
         self.max_stats = max_stats         # keep only the newest N StepStats
-        #                                    (None = unbounded; a long-lived
-        #                                    server MUST bound it — totals
-        #                                    above never truncate)
+        #                                    (bounded by default so long-lived
+        #                                    engines cannot grow without
+        #                                    limit; None = unbounded, for
+        #                                    short diagnostic runs — totals
+        #                                    above never truncate either way)
         self.on_new_work = None            # optional callable: submit/cancel
         #                                    wake-up hook for a server loop
         self._master_key = jax.random.PRNGKey(seed)
@@ -291,6 +323,8 @@ class ServingEngine:
             handle = RequestHandle(self, req, stream=stream)
             self._requests[req.rid] = req
             self._handles[req.rid] = handle
+            if self.telemetry is not None:
+                self.telemetry.on_submit(req)
             self.scheduler.add(req)
         self._wake()
         return handle
@@ -340,26 +374,43 @@ class ServingEngine:
             return self._step_locked()
 
     def _step_locked(self) -> List[StepEvent]:
+        tm = self.telemetry
         t_step = time.perf_counter()
         self._sync_s = 0.0
         events: List[StepEvent] = []
         events += self._process_cancels()
+        if tm is not None:
+            tm.phase(PHASE_CANCEL, t_step, time.perf_counter(),
+                     self._step_idx)
         decode_batch = padded = 0
         spec_batch = drafted = accepted = 0
         if self.running:
             spec_rows = [r for r in self.running if self._can_spec(r)]
             normal_rows = [r for r in self.running if not self._can_spec(r)]
             if normal_rows:
+                t0 = time.perf_counter()
                 decode_batch, padded, evs = self._decode(normal_rows)
                 events.extend(evs)
+                if tm is not None:
+                    tm.phase(PHASE_DECODE, t0, time.perf_counter(),
+                             self._step_idx)
             if spec_rows:
+                # draft / verify / sample sub-phases are timed inside
                 spec_batch, drafted, accepted, evs = \
                     self._spec_decode(spec_rows)
                 events.extend(evs)
+        t0 = time.perf_counter()
         admitted, cached_toks, evs = self._admit()
         events.extend(evs)
+        if tm is not None:
+            tm.phase(PHASE_ADMISSION, t0, time.perf_counter(),
+                     self._step_idx)
+        t0 = time.perf_counter()
         pf_tokens, evs = self._prefill_step()
         events.extend(evs)
+        if tm is not None and pf_tokens:
+            tm.phase(PHASE_PREFILL, t0, time.perf_counter(),
+                     self._step_idx)
         self._step_idx += 1
         n_fin = sum(1 for e in events if e.kind == EVENT_FINISH)
         n_cancel = sum(1 for e in events if e.kind == EVENT_CANCEL)
@@ -381,6 +432,10 @@ class ServingEngine:
             sync_ms=self._sync_s * 1e3))
         if self.max_stats is not None and len(self.stats) >= 2 * self.max_stats:
             del self.stats[:-self.max_stats]     # amortized O(1) trim
+        if tm is not None:
+            tm.on_step(kv=self.kv, reserved=self._reserved,
+                       wall_s=time.perf_counter() - t_step,
+                       sync_s=self._sync_s)
         for ev in events:
             h = self._handles.get(ev.rid)
             if h is not None:
@@ -403,8 +458,21 @@ class ServingEngine:
 
     # ------------------------------------------------------------ internals
 
+    def export_trace(self, path: str) -> None:
+        """Write the Chrome-trace JSON timeline (requires telemetry with
+        tracing on; open the file in chrome://tracing or ui.perfetto.dev)."""
+        if self.telemetry is None or self.telemetry.trace is None:
+            raise RuntimeError("engine was built without trace telemetry; "
+                               "construct with ServingEngine(..., "
+                               "telemetry=True)")
+        with self._lock:
+            live = list(self._requests.values())
+        self.telemetry.trace.export(path, live_requests=live)
+
     def _jit_decode(self, padded_batch: int, greedy: bool):
         if (padded_batch, greedy) not in self._decode_fns:
+            if self.telemetry is not None:
+                self.telemetry.on_compile("decode")
             cfg = self.cfg_decode
 
             # (bt, sl, toks, keys, temps, topks, topps) in; (tok, last) out
@@ -427,6 +495,8 @@ class ServingEngine:
                      greedy: bool):
         key = (padded_batch, padded_chunk, greedy)
         if key not in self._prefill_fns:
+            if self.telemetry is not None:
+                self.telemetry.on_compile("prefill")
             cfg = self.cfg_prefill
 
             # (bt, toks, start, num_new, keys, temps, topks, topps) in;
@@ -458,6 +528,11 @@ class ServingEngine:
         req.status = CANCELLED if reason == FINISH_CANCELLED else FINISHED
         req.finish_reason = reason
         req.finish_time = time.perf_counter()
+        if self.telemetry is not None:
+            # before RequestOutput.from_request so the FINISH/CANCEL instant
+            # lands on the spans the output snapshots
+            self.telemetry.on_terminal(req, reason,
+                                       cancelled=reason == FINISH_CANCELLED)
         self._reserved -= req.reserved_blocks
         req.reserved_blocks = 0
         req.cow_spare = 0
@@ -503,6 +578,8 @@ class ServingEngine:
         req.status = PREEMPTED
         req.num_preemptions += 1
         self.preempted_total += 1
+        if self.telemetry is not None:
+            self.telemetry.on_preempt(req)
         self.scheduler.add(req)
         return StepEvent(kind=EVENT_PREEMPT, rid=req.rid,
                          step=self._step_idx)
@@ -554,10 +631,13 @@ class ServingEngine:
         self._sync(next_toks)
         next_toks = np.asarray(next_toks)
         events: List[StepEvent] = []
+        now = time.perf_counter()
         for i, r in enumerate(batch):
             if r.logits_trace is not None:
                 r.logits_trace.append(np.asarray(logits[i], np.float32))
             reason = r.append(next_toks[i])
+            if self.telemetry is not None:
+                self.telemetry.on_tokens(r, 1, now)
             events.append(StepEvent(kind=EVENT_TOKEN, rid=r.rid,
                                     step=self._step_idx,
                                     tokens=(int(next_toks[i]),)))
@@ -613,6 +693,8 @@ class ServingEngine:
                 sampling_mod.spec_batch_keys(base, pos + j,
                                              sampling_mod.STREAM_DRAFT)
                 for j in range(k)]))
+        tm = self.telemetry
+        t0 = time.perf_counter()
         with self._mesh_ctx():
             d_toks, d_logits, self.kv.pools = self.drafter.draft(
                 self.params, self.kv.pools, jnp.asarray(bt),
@@ -620,20 +702,26 @@ class ServingEngine:
                 jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps),
                 greedy=all_greedy)
         self._sync(d_toks)
+        if tm is not None:
+            tm.phase(PHASE_DRAFT, t0, time.perf_counter(), self._step_idx)
         d_toks = np.asarray(d_toks)
         verify_toks = np.zeros((padded, k + 1), np.int32)
         verify_toks[:, 0] = tok0[:, 0]
         verify_toks[:, 1:] = d_toks
         num_new = dlen + (dlen > 0)            # k_eff + 1; 0 for padded rows
+        t0 = time.perf_counter()
         with self._mesh_ctx():
             t_logits, self.kv.pools = self.verifier.verify(
                 self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl0),
                 jnp.asarray(num_new), jnp.asarray(verify_toks))
         self._sync(t_logits)
+        if tm is not None:
+            tm.phase(PHASE_VERIFY, t0, time.perf_counter(), self._step_idx)
         t_logits = np.asarray(t_logits)
         d_logits_np = None if all_greedy else np.asarray(d_logits)
         events: List[StepEvent] = []
         drafted_total = accepted_total = 0
+        t_sample = time.perf_counter()
         for i, r in enumerate(rows):
             k_eff = k_effs[i]
             emitted, n_acc = self.verifier.accept(
@@ -653,6 +741,9 @@ class ServingEngine:
                 reason = r.append(int(tok))
                 if reason:
                     break
+            if tm is not None:
+                tm.on_spec(r, k_eff, n_acc)
+                tm.on_tokens(r, len(committed))
             events.append(StepEvent(kind=EVENT_TOKEN, rid=r.rid,
                                     step=self._step_idx,
                                     tokens=tuple(committed)))
@@ -664,6 +755,10 @@ class ServingEngine:
                 freed = rollback_after_verify(self.kv, r.rid, r.seq_len - 1)
                 r.reserved_blocks += freed
                 self._reserved += freed
+        if tm is not None:
+            # host-side acceptance / rejection-sampling over the whole batch
+            tm.phase(PHASE_SAMPLE, t_sample, time.perf_counter(),
+                     self._step_idx)
         return b, drafted_total, accepted_total, events
 
     def _admit(self):
@@ -751,6 +846,8 @@ class ServingEngine:
             cached_tokens += start
             self.cached_tokens_total += start
             self.prompt_tokens_total += tlen
+            if self.telemetry is not None:
+                self.telemetry.on_admit(req, start, tlen - start)
             req.cow_spare = spare
             req.reserved_blocks = total - target_blocks + spare
             self._reserved += req.reserved_blocks
@@ -843,7 +940,11 @@ class ServingEngine:
             self.prefilling = [x for x in self.prefilling if x.rid != r.rid]
             r.status = RUNNING
             self.running.append(r)
+            if self.telemetry is not None:
+                self.telemetry.on_running(r)
             reason = r.append(int(tok[i]))
+            if self.telemetry is not None:
+                self.telemetry.on_tokens(r, 1)
             events.append(StepEvent(kind=EVENT_TOKEN, rid=r.rid,
                                     step=self._step_idx,
                                     tokens=(int(tok[i]),)))

@@ -113,6 +113,16 @@ class PagedKVCache:
         """Blocks needed to hold ``num_tokens`` cache slots."""
         return -(-num_tokens // self.block_size)
 
+    def occupancy(self) -> Dict[str, int]:
+        """Point-in-time pool picture for telemetry: block counts by state
+        (``free`` + ``evictable`` + ``live`` = num_blocks - 1; the null
+        block is never counted) plus the lifetime copy-on-write and
+        pressure-eviction event totals."""
+        free, evictable = len(self._free), len(self._lru)
+        return {"free": free, "evictable": evictable,
+                "live": self.num_blocks - 1 - free - evictable,
+                "cow_total": self.cow_count, "evict_total": self.evict_count}
+
     def can_allocate(self, n_blocks: int) -> bool:
         return n_blocks <= self.num_available
 

@@ -78,6 +78,9 @@ class Request:
     #                                          copy-on-write at prefill time
     cancel_requested: bool = False           # processed at the next step()
     num_preemptions: int = 0                 # times evicted and resumed
+    spans: Optional[List] = None             # completed SpanEvents (telemetry
+    #                                          tracing on; see serving/trace.py)
+    span_open: Optional[tuple] = None        # (name, t0, args) span in flight
     spec_drafted: int = 0                    # draft tokens proposed for me
     spec_accepted: int = 0                   # ... of which the verifier kept
     first_token_time: Optional[float] = None
@@ -136,6 +139,9 @@ class RequestOutput:
     cached_prefix_tokens: int = 0    # prefill tokens served from the prefix
     #                                  cache (latest admission)
     logits: Optional[list] = None    # per-token logits (engine debug mode)
+    spans: Optional[tuple] = None    # lifecycle SpanEvents (telemetry tracing
+    #                                  on: QUEUED/PREFILL/DECODE spans plus
+    #                                  PREEMPT/SPEC/FINISH/CANCEL instants)
 
     @property
     def ttft(self) -> float:
@@ -169,7 +175,8 @@ class RequestOutput:
                    spec_accepted=req.spec_accepted,
                    cached_prefix_tokens=req.cached_prefix_tokens,
                    logits=(None if req.logits_trace is None
-                           else list(req.logits_trace)))
+                           else list(req.logits_trace)),
+                   spans=(None if req.spans is None else tuple(req.spans)))
 
 
 @dataclasses.dataclass(frozen=True)

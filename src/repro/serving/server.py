@@ -21,7 +21,13 @@ Endpoints:
   POST /v1/cancel          {"id": "cmpl-<rid>"} -> {"cancelled": bool}
   GET  /healthz            liveness + queue depths
   GET  /v1/stats           engine counters (finished/cancelled/preempted,
-                           KV-pool picture, per-step stats tail)
+                           KV-pool picture) + a telemetry rollup (phase
+                           timing means, cache hit rate, spec acceptance,
+                           compile counts) when the engine has telemetry
+  GET  /metrics            Prometheus text exposition of the engine's
+                           metrics registry (step-phase histograms, KV
+                           occupancy gauges, TTFT/ITL histograms, ...);
+                           503 when the engine was built without telemetry
 
 The repo has no tokenizer: prompts are token-id lists, and completions
 return ``token_ids`` (an OpenAI-shaped envelope, not a drop-in clone).
@@ -77,8 +83,27 @@ class ServingServer:
                     self._json(200, server.health())
                 elif self.path == "/v1/stats":
                     self._json(200, server.stats())
+                elif self.path == "/metrics":
+                    self._metrics()
                 else:
                     self._json(404, {"error": f"no route {self.path}"})
+
+            def _metrics(self):
+                tm = server.engine.telemetry
+                if tm is None:
+                    self._json(503, {"error": "telemetry disabled: build "
+                                              "the engine with "
+                                              "telemetry=True (serve.py "
+                                              "--http enables it unless "
+                                              "--no-metrics)"})
+                    return
+                body = tm.registry.render_prometheus().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
 
             def do_POST(self):
                 try:
@@ -270,13 +295,16 @@ class ServingServer:
 
     def stats(self) -> dict:
         e = self.engine
-        return {"steps": e._step_idx, "finished": e.finished_total,
-                "cancelled": e.cancelled_total,
-                "preempted": e.preempted_total,
-                "running": len(e.running), "waiting": len(e.scheduler),
-                "kv": {"num_blocks": e.kv.num_blocks,
-                       "free": e.kv.num_free,
-                       "evictable_cached": e.kv.num_evictable,
-                       "reserved": e._reserved},
-                "prefill_tokens_total": e.prefill_tokens_total,
-                "cached_tokens_total": e.cached_tokens_total}
+        out = {"steps": e._step_idx, "finished": e.finished_total,
+               "cancelled": e.cancelled_total,
+               "preempted": e.preempted_total,
+               "running": len(e.running), "waiting": len(e.scheduler),
+               "kv": {"num_blocks": e.kv.num_blocks,
+                      "free": e.kv.num_free,
+                      "evictable_cached": e.kv.num_evictable,
+                      "reserved": e._reserved},
+               "prefill_tokens_total": e.prefill_tokens_total,
+               "cached_tokens_total": e.cached_tokens_total}
+        if e.telemetry is not None:
+            out["telemetry"] = e.telemetry.summary()
+        return out

@@ -37,10 +37,15 @@ class Drafter:
         # in/out_shardings (params + pools sharded, host args replicated)
         # so the whole k-step scan compiles under the mesh
         self.jit_shardings: Dict = {}
+        # telemetry: the engine installs a callback fired on every
+        # bucketed-shape cache miss (a fresh XLA compile of the draft scan)
+        self.on_compile = None
         self._fns: Dict[Tuple[int, bool], callable] = {}
 
     def _jit(self, padded_batch: int, greedy: bool):
         if (padded_batch, greedy) not in self._fns:
+            if self.on_compile is not None:
+                self.on_compile("draft")
             cfg, k = self.cfg, self.k
 
             @functools.partial(jax.jit, donate_argnums=(1,),

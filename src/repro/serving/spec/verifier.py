@@ -50,12 +50,17 @@ class Verifier:
         # tensor-parallel serving: the engine installs explicit
         # in/out_shardings so the batched verify compiles under the mesh
         self.jit_shardings: Dict = {}
+        # telemetry: engine-installed callback fired per bucketed-shape
+        # cache miss (a fresh XLA compile of the batched verify)
+        self.on_compile = None
         self._fns: Dict[int, callable] = {}
 
     # ------------------------------------------------------------ device side
 
     def _jit(self, padded_batch: int):
         if padded_batch not in self._fns:
+            if self.on_compile is not None:
+                self.on_compile("verify")
             cfg = self.cfg
 
             @functools.partial(jax.jit, donate_argnums=(1,),

@@ -1,0 +1,335 @@
+"""Telemetry subsystem: metrics registry math, Prometheus exposition,
+request span lifecycles (simple / cancel / preempt / spec), Chrome-trace
+export, and telemetry-off parity.
+
+The acceptance bar: span sequences are deterministic per lifecycle;
+histogram bucket math matches the Prometheus cumulative convention; and an
+engine with telemetry disabled produces token-identical greedy outputs to
+one with it enabled (observability must be invisible in results).
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import (SamplingParams, ServingEngine, SpecConfig,
+                           Telemetry)
+from repro.serving.telemetry import (RATIO_BUCKETS, MetricsRegistry,
+                                     ServingMetrics)
+from repro.serving.trace import (SPAN_CANCEL, SPAN_DECODE, SPAN_FINISH,
+                                 SPAN_PREEMPT, SPAN_PREFILL, SPAN_QUEUED,
+                                 SPAN_SPEC, TraceRecorder, span_names)
+
+BS = 4
+
+
+def _cfg():
+    base = get_config("paper-0.5b").reduced()
+    return dataclasses.replace(base, sparsity=dataclasses.replace(
+        base.sparsity, ffn_impl="dense"))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, n).tolist() for n in lens]
+
+
+def _drain(engine):
+    events = []
+    while engine.has_unfinished():
+        events.extend(engine.step())
+    return events
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = _cfg()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+# --------------------------------------------------------------------------- #
+# metrics registry
+# --------------------------------------------------------------------------- #
+
+def test_counter_and_gauge_basics():
+    r = MetricsRegistry()
+    c = r.counter("c_total", "a counter", ["kind"])
+    c.inc(kind="x")
+    c.inc(2.5, kind="x")
+    c.inc(kind="y")
+    assert c.value(kind="x") == 3.5 and c.value(kind="y") == 1.0
+    assert c.value(kind="unseen") == 0.0
+    with pytest.raises(ValueError):
+        c.inc(-1, kind="x")                  # counters only go up
+    with pytest.raises(ValueError):
+        c.inc(kind="x", extra="nope")        # label-name mismatch
+    g = r.gauge("g", "a gauge")
+    g.set(7)
+    g.inc(-2)
+    assert g.value() == 5
+
+
+def test_histogram_bucket_math():
+    r = MetricsRegistry()
+    h = r.histogram("h_seconds", "latency", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.1, 0.5, 2.0, 99.0):    # 0.1 is an inclusive upper bound
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 5
+    assert snap["sum"] == pytest.approx(101.65)
+    assert snap["buckets"] == {0.1: 2, 1.0: 3, 10.0: 4}   # cumulative
+    assert h.mean() == pytest.approx(101.65 / 5)
+    text = r.render_prometheus()
+    assert 'h_seconds_bucket{le="0.1"} 2' in text
+    assert 'h_seconds_bucket{le="+Inf"} 5' in text        # +Inf == count
+    assert "h_seconds_count 5" in text
+    with pytest.raises(ValueError):
+        r.histogram("bad", "descending", buckets=(3.0, 1.0))
+
+
+def test_render_prometheus_format():
+    r = MetricsRegistry()
+    c = r.counter("req_total", "requests", ["outcome"])
+    c.inc(3, outcome="ok")
+    text = r.render_prometheus()
+    assert "# HELP req_total requests" in text
+    assert "# TYPE req_total counter" in text
+    assert 'req_total{outcome="ok"} 3' in text
+    # re-registering the same family returns the same object; a conflicting
+    # shape is an error, not silent corruption
+    assert r.counter("req_total", "requests", ["outcome"]) is c
+    with pytest.raises(ValueError):
+        r.gauge("req_total", "requests", ["outcome"])
+
+
+def test_disabled_registry_is_inert():
+    r = MetricsRegistry(enabled=False)
+    c = r.counter("c_total", "c", ["k"])
+    h = r.histogram("h", "h")
+    c.inc(5, k="x")
+    h.observe(1.0)
+    assert c.value(k="x") == 0.0
+    assert h.snapshot() == {"count": 0, "sum": 0.0, "buckets": {}}
+    assert h.label_sets() == []
+    assert r.render_prometheus() == ""
+
+
+def test_serving_metrics_catalog_renders():
+    m = ServingMetrics(MetricsRegistry())
+    m.step_phase_seconds.observe(0.01, phase="decode")
+    m.kv_blocks.set(12, state="free")
+    m.spec_acceptance.observe(0.75)
+    text = m.registry.render_prometheus()
+    assert "# TYPE serving_step_phase_seconds histogram" in text
+    assert 'serving_kv_blocks{state="free"} 12' in text
+    # ratio histogram uses the [0, 1] bucket grid, not latency buckets
+    assert m.spec_acceptance.buckets == RATIO_BUCKETS
+
+
+# --------------------------------------------------------------------------- #
+# span lifecycles (deterministic sequences per lifecycle shape)
+# --------------------------------------------------------------------------- #
+
+def test_spans_simple_lifecycle(dense_model):
+    params, cfg = dense_model
+    (p,) = _prompts(cfg, [6])
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32, telemetry=True)
+    h = engine.submit(p, max_tokens=4)
+    _drain(engine)
+    out = h.result()
+    assert span_names(out.spans) == \
+        [SPAN_QUEUED, SPAN_PREFILL, SPAN_DECODE, SPAN_FINISH]
+    q, pf, dec, fin = out.spans
+    assert not q.instant and not pf.instant and not dec.instant
+    assert fin.instant and fin.arg("reason") == "length"
+    # spans are chronological and the lifecycle is contiguous
+    assert q.t0 <= q.t1 <= pf.t0 <= pf.t1 <= dec.t0 <= dec.t1 <= fin.t0
+    assert pf.arg("cached_prefix_tokens") == 0
+
+
+def test_spans_cancel_queued_and_running(dense_model):
+    params, cfg = dense_model
+    p1, p2 = _prompts(cfg, [8, 6], seed=5)
+    # pool sized for one request: the second stays queued
+    engine = ServingEngine(params, cfg, block_size=BS, num_blocks=4,
+                           max_batch=2, max_seq_len=16, telemetry=True)
+    ha = engine.submit(p1, max_tokens=4)
+    hb = engine.submit(p2, max_tokens=4)
+    engine.step()
+    assert hb.cancel()                        # cancelled while still queued
+    engine.step()
+    assert span_names(hb.result().spans) == [SPAN_QUEUED, SPAN_CANCEL]
+    assert ha.status == "running"
+    assert ha.cancel()                        # cancelled mid-decode
+    _drain(engine)
+    assert span_names(ha.result().spans) == \
+        [SPAN_QUEUED, SPAN_PREFILL, SPAN_DECODE, SPAN_CANCEL]
+    assert ha.result().spans[-1].arg("reason") == "cancelled"
+
+
+def test_spans_preempt_resume(dense_model):
+    """A preempted request re-opens QUEUED: its trace shows two full
+    QUEUED->PREFILL->DECODE runs separated by the PREEMPT instant."""
+    params, cfg = dense_model
+    lo_p, hi_p = _prompts(cfg, [8, 8], seed=21)
+    engine = ServingEngine(params, cfg, block_size=BS, num_blocks=6,
+                           max_batch=2, max_seq_len=16, scheduler="priority",
+                           telemetry=True)
+    lo = engine.submit(lo_p, max_tokens=6, priority=0)
+    for _ in range(3):
+        engine.step()
+    hi = engine.submit(hi_p, max_tokens=4, priority=1)
+    _drain(engine)
+    assert lo.result().num_preemptions == 1
+    assert span_names(lo.result().spans) == \
+        [SPAN_QUEUED, SPAN_PREFILL, SPAN_DECODE, SPAN_PREEMPT,
+         SPAN_QUEUED, SPAN_PREFILL, SPAN_DECODE, SPAN_FINISH]
+    # the resume prefill hit the prefix cache (parked blocks matched)
+    assert lo.result().spans[5].arg("cached_prefix_tokens") > 0
+    assert span_names(hi.result().spans) == \
+        [SPAN_QUEUED, SPAN_PREFILL, SPAN_DECODE, SPAN_FINISH]
+    m = engine.telemetry.metrics
+    assert m.preemptions_total.value() == 1
+
+
+def test_spans_spec_lifecycle(dense_model):
+    """Speculative steps leave SPEC instants (drafted/accepted args) inside
+    the DECODE span, and the metrics acceptance books match the output's."""
+    params, cfg = dense_model
+    (p,) = _prompts(cfg, [8], seed=31)
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32, telemetry=True,
+                           spec=SpecConfig(k=2, draft_backend="tile_skip"))
+    h = engine.submit(p, max_tokens=6)
+    _drain(engine)
+    out = h.result()
+    names = span_names(out.spans)
+    specs = [s for s in out.spans if s.name == SPAN_SPEC]
+    assert specs, "no SPEC instants on a speculative request"
+    assert names[:2] == [SPAN_QUEUED, SPAN_PREFILL]
+    assert names[2] == SPAN_DECODE and names[-1] == SPAN_FINISH
+    assert set(names[3:-1]) == {SPAN_SPEC}
+    assert sum(s.arg("drafted") for s in specs) == out.spec_drafted
+    assert sum(s.arg("accepted") for s in specs) == out.spec_accepted
+    m = engine.telemetry.metrics
+    assert m.spec_tokens_total.value(outcome="drafted") == out.spec_drafted
+    assert m.spec_tokens_total.value(outcome="accepted") == out.spec_accepted
+    assert m.jit_compiles_total.value(entry="draft") >= 1
+    assert m.jit_compiles_total.value(entry="verify") >= 1
+
+
+# --------------------------------------------------------------------------- #
+# engine metrics integration + disabled parity
+# --------------------------------------------------------------------------- #
+
+def test_engine_metrics_books(dense_model):
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [6, 9], seed=3)
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32, telemetry=True)
+    outs = engine.generate(prompts, sampling=SamplingParams(), max_tokens=5)
+    m = engine.telemetry.metrics
+    assert m.submitted_total.value() == 2
+    assert m.requests_total.value(outcome="finished") == 2
+    assert m.tokens_total.value() == sum(len(o.token_ids) for o in outs)
+    assert m.steps_total.value() == engine._step_idx
+    assert m.ttft_seconds.snapshot(priority="0")["count"] == 2
+    assert m.itl_seconds.snapshot(priority="0")["count"] == \
+        sum(len(o.token_ids) for o in outs) - 2
+    assert m.jit_compiles_total.value(entry="decode") >= 1
+    assert m.jit_compiles_total.value(entry="prefill") >= 1
+    # KV gauges reflect the drained pool (usable = num_blocks - sentinel)
+    assert m.kv_blocks.value(state="free") == engine.kv.num_free
+    assert m.kv_blocks.value(state="free") \
+        + m.kv_blocks.value(state="evictable") \
+        + m.kv_blocks.value(state="live") == engine.kv.num_blocks - 1
+    prom = engine.telemetry.registry.render_prometheus()
+    assert "serving_build_info" in prom
+    summary = engine.telemetry.summary()
+    assert summary["tokens_generated"] == m.tokens_total.value()
+    assert summary["ttft_s"]["0"]["count"] == 2
+
+
+def test_disabled_telemetry_parity(dense_model):
+    """telemetry=False (the default) is token-identical to telemetry=True
+    and leaves no per-request span state behind."""
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [6, 9], seed=7)
+    kw = dict(block_size=BS, max_batch=2, max_seq_len=32)
+    outs_off = ServingEngine(params, cfg, **kw).generate(
+        prompts, max_tokens=5)
+    outs_on = ServingEngine(params, cfg, telemetry=True, **kw).generate(
+        prompts, max_tokens=5)
+    assert [o.token_ids for o in outs_off] == [o.token_ids for o in outs_on]
+    assert all(o.spans is None for o in outs_off)
+    assert all(o.spans is not None for o in outs_on)
+    off = ServingEngine(params, cfg, **kw)
+    assert off.telemetry is None
+    with pytest.raises(RuntimeError):
+        off.export_trace("/tmp/never-written.trace.json")
+
+
+def test_stats_tail_is_bounded(dense_model):
+    """The per-step stats list trims to max_stats (default 4096) so a
+    long-lived engine cannot grow host memory without bound; totals keep
+    counting past the trim."""
+    params, cfg = dense_model
+    (p,) = _prompts(cfg, [6], seed=9)
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32, max_stats=2)
+    engine.generate([p], max_tokens=6)
+    assert len(engine.stats) == 2
+    assert engine._step_idx > 2
+    default = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                            max_seq_len=32)
+    assert default.max_stats == 4096
+
+
+# --------------------------------------------------------------------------- #
+# chrome-trace export
+# --------------------------------------------------------------------------- #
+
+def test_chrome_trace_export(dense_model, tmp_path):
+    params, cfg = dense_model
+    prompts = _prompts(cfg, [6, 9], seed=11)
+    engine = ServingEngine(params, cfg, block_size=BS, max_batch=2,
+                           max_seq_len=32, telemetry=True)
+    engine.generate(prompts, max_tokens=4)
+    path = tmp_path / "engine.trace.json"
+    engine.export_trace(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and evs
+    assert all({"ph", "pid", "tid", "name"} <= set(e) for e in evs)
+    # engine phase track + one named track per request
+    names = {e["args"]["name"] for e in evs if e["ph"] == "M"}
+    assert "engine step phases" in names
+    assert {"request 0", "request 1"} <= names
+    durs = [e for e in evs if e["ph"] == "X"]
+    assert all(e["dur"] >= 0 and e["ts"] >= 0 for e in durs)
+    assert {"decode", SPAN_DECODE} <= {e["name"] for e in durs}
+    fin = [e for e in evs if e["ph"] == "i" and e["name"] == SPAN_FINISH]
+    assert len(fin) == 2
+
+
+def test_trace_recorder_live_requests_snapshot():
+    """Exporting mid-flight includes still-open spans up to 'now' without
+    mutating the request's own state."""
+
+    class Req:
+        rid, spans, span_open = 7, [], None
+
+    rec = TraceRecorder()
+    req = Req()
+    rec.begin_span(req, SPAN_QUEUED)
+    doc = rec.to_chrome(live_requests=[req])
+    live = [e for e in doc["traceEvents"]
+            if e["ph"] == "X" and e["name"] == SPAN_QUEUED]
+    assert len(live) == 1 and live[0]["tid"] == 8
+    assert req.span_open is not None and req.spans == []
