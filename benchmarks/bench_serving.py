@@ -46,6 +46,8 @@ from repro.models import lm
 from repro.serving import (EVENT_TOKEN, SamplingParams, ServingEngine,
                            SpecConfig, Telemetry, finished_outputs)
 
+import common
+
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
@@ -480,6 +482,8 @@ def main(argv=None):
     if args.json_out:
         write_bench_json(args.json_out, {
             "bench": "serving",
+            "schema_version": common.BENCH_SCHEMA_VERSION,
+            "meta": common.bench_meta(args.smoke),
             "arch": cfg.name, "reduced": args.reduced,
             "num_requests": args.num_requests,
             "block_size": args.block_size, "max_batch": args.max_batch,

@@ -26,6 +26,8 @@ import jax
 import numpy as np
 
 from bench_serving import REPO_ROOT, make_workload, write_bench_json
+
+import common as bench_common
 from repro.configs import get_config
 from repro.models import lm
 from repro.serving import (SamplingParams, ServingEngine, SpecConfig,
@@ -156,6 +158,8 @@ def main(argv=None):
     if args.json_out:
         write_bench_json(args.json_out, {
             "bench": "spec_decode",
+            "schema_version": bench_common.BENCH_SCHEMA_VERSION,
+            "meta": bench_common.bench_meta(args.smoke),
             "arch": cfg.name, "reduced": args.reduced,
             "num_requests": args.num_requests,
             "verify_backend": args.backend,

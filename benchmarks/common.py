@@ -10,7 +10,9 @@ sparsification dynamics are observable within a CPU budget.
 from __future__ import annotations
 
 import dataclasses
+import subprocess
 import time
+from datetime import datetime, timezone
 from typing import Callable, Dict, List
 
 import jax
@@ -24,6 +26,32 @@ from repro.optim import adamw
 from repro import training
 
 BATCH, SEQ = 4, 64
+
+# Version of the BENCH_*.json payload layout; benchmarks/compare.py refuses
+# to diff mismatched versions. Bump when renaming/removing payload fields.
+BENCH_SCHEMA_VERSION = 1
+
+
+def _git_commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def bench_meta(smoke: bool) -> Dict:
+    """Provenance stamp every BENCH_*.json carries: enough to know which
+    code, runtime, and device produced a number before trusting a diff."""
+    return {
+        "git_commit": _git_commit(),
+        "timestamp_utc": datetime.now(timezone.utc).isoformat(),
+        "jax_version": jax.__version__,
+        "device_kind": jax.devices()[0].device_kind,
+        "device_count": jax.device_count(),
+        "smoke": bool(smoke),
+    }
 
 
 def tiny_cfg(l1=0.0, layers=2, d_model=96, d_ff=256, gated=True,

@@ -1,0 +1,189 @@
+"""Bench-regression gate: diff fresh BENCH_*.json against committed
+baselines with per-metric tolerances.
+
+Each BENCH_*.json stamps a ``schema_version`` + ``meta`` block (see
+``benchmarks/common.bench_meta``); the gate compares only fields that are
+deterministic for the chosen tolerance profile:
+
+  smoke  what CI runs: exact token/step counts and identity flags (the
+         serving workloads carry no EOS, so token counts are machine-
+         independent; churn arrivals are step-indexed and seeded), loose
+         absolute bounds on float ratios, NO wall-clock metrics.
+  full   smoke plus generous relative bounds on throughput numbers — for
+         like-for-like hardware comparisons outside CI.
+
+Usage (exit 0 = within tolerance, 1 = regression/drift, 2 = bad invocation):
+
+  PYTHONPATH=src python benchmarks/compare.py \
+      --baseline benchmarks/baselines/ --tolerance-profile smoke \
+      --report compare_report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# (path, mode, tol): path is dotted, one optional "[]" zips a list pairwise;
+# mode "equal" = exact match, "abs" = |fresh - base| <= tol,
+# "rel" = |fresh - base| <= tol * max(|base|, eps)
+_SMOKE: Dict[str, List[Tuple[str, str, float]]] = {
+    "serving": [
+        ("schema_version", "equal", 0),
+        ("results[].backend", "equal", 0),
+        ("results[].tokens", "equal", 0),
+        ("results[].steps", "equal", 0),
+        ("results[].prompt_tokens", "equal", 0),
+        ("results[].prefill_tokens", "equal", 0),
+        ("results[].cached_tokens", "equal", 0),
+        ("results[].cache_hit_rate", "abs", 1e-9),
+        ("telemetry.outputs_identical", "equal", 0),
+        ("tp_identity", "equal", 0),
+        ("scheduler_identity.outputs_identical", "equal", 0),
+        ("shared_prefix.cache_hit_rate", "abs", 1e-9),
+        ("shared_prefix.prefill_tokens_saved_frac", "abs", 1e-9),
+        ("churn.requests", "equal", 0),
+        ("churn.cancelled", "equal", 0),
+        ("churn.preempted", "equal", 0),
+        ("churn.steps", "equal", 0),
+    ],
+    "spec_decode": [
+        ("schema_version", "equal", 0),
+        ("results[].mode", "equal", 0),
+        ("results[].tokens", "equal", 0),
+        # acceptance depends on float rounding across BLAS builds: bound it
+        # instead of pinning it
+        ("results[].acceptance_rate", "abs", 0.15),
+        ("results[].steps", "rel", 0.30),
+    ],
+}
+
+_FULL: Dict[str, List[Tuple[str, str, float]]] = {
+    "serving": _SMOKE["serving"] + [
+        ("results[].toks_per_s", "rel", 0.50),
+        ("results[].step_wall_ms_mean", "rel", 0.50),
+    ],
+    "spec_decode": _SMOKE["spec_decode"] + [
+        ("results[].toks_per_s", "rel", 0.50),
+    ],
+}
+
+PROFILES = {"smoke": _SMOKE, "full": _FULL}
+
+
+def _get(obj, parts: List[str]):
+    for p in parts:
+        if not isinstance(obj, dict) or p not in obj:
+            return None
+        obj = obj[p]
+    return obj
+
+
+def _pairs(base: dict, fresh: dict, path: str):
+    """Yield (label, base_value, fresh_value) for one check path; a None
+    value means the field is missing on that side."""
+    if "[]" in path:
+        head, tail = path.split("[].", 1)
+        bl = _get(base, head.split("."))
+        fl = _get(fresh, head.split("."))
+        if not isinstance(bl, list) or not isinstance(fl, list):
+            yield path, bl, fl
+            return
+        if len(bl) != len(fl):
+            yield f"{head}.length", len(bl), len(fl)
+            return
+        for i, (b, f) in enumerate(zip(bl, fl)):
+            yield (f"{head}[{i}].{tail}", _get(b, tail.split(".")),
+                   _get(f, tail.split(".")))
+    else:
+        yield path, _get(base, path.split(".")), _get(fresh, path.split("."))
+
+
+def _within(mode: str, tol: float, base, fresh) -> bool:
+    if base is None and fresh is None:
+        return True
+    if base is None or fresh is None:
+        return False
+    if mode == "equal" or isinstance(base, (str, bool)):
+        return base == fresh
+    b, f = float(base), float(fresh)
+    if mode == "abs":
+        return abs(f - b) <= tol
+    return abs(f - b) <= tol * max(abs(b), 1e-12)        # rel
+
+
+def compare_file(base: dict, fresh: dict,
+                 checks: List[Tuple[str, str, float]]) -> List[Dict]:
+    rows = []
+    for path, mode, tol in checks:
+        for label, b, f in _pairs(base, fresh, path):
+            rows.append({"metric": label, "mode": mode, "tolerance": tol,
+                         "baseline": b, "fresh": f,
+                         "ok": _within(mode, tol, b, f)})
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="directory of committed baseline BENCH_*.json files")
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding freshly produced BENCH_*.json "
+                         "(default: repo root / cwd)")
+    ap.add_argument("--tolerance-profile", default="smoke",
+                    choices=sorted(PROFILES))
+    ap.add_argument("--report", default=None,
+                    help="write the full comparison as JSON here")
+    args = ap.parse_args(argv)
+
+    profile = PROFILES[args.tolerance_profile]
+    names = sorted(n for n in os.listdir(args.baseline)
+                   if n.startswith("BENCH_") and n.endswith(".json"))
+    if not names:
+        print(f"compare: no BENCH_*.json baselines in {args.baseline}",
+              file=sys.stderr)
+        return 2
+
+    report = {"profile": args.tolerance_profile, "files": {}}
+    failed = False
+    for name in names:
+        base = json.load(open(os.path.join(args.baseline, name)))
+        fresh_path = os.path.join(args.fresh, name)
+        if not os.path.exists(fresh_path):
+            print(f"FAIL {name}: fresh run missing ({fresh_path})")
+            report["files"][name] = {"error": "fresh file missing"}
+            failed = True
+            continue
+        fresh = json.load(open(fresh_path))
+        checks = profile.get(base.get("bench"))
+        if checks is None:
+            print(f"SKIP {name}: no checks for bench "
+                  f"{base.get('bench')!r} in this profile")
+            report["files"][name] = {"skipped": True}
+            continue
+        rows = compare_file(base, fresh, checks)
+        bad = [r for r in rows if not r["ok"]]
+        report["files"][name] = {
+            "bench": base.get("bench"),
+            "checks": len(rows), "failures": len(bad), "rows": rows,
+            "baseline_meta": base.get("meta"), "fresh_meta": fresh.get("meta"),
+        }
+        status = "FAIL" if bad else "ok"
+        print(f"{status:4s} {name}: {len(rows) - len(bad)}/{len(rows)} "
+              f"checks within tolerance")
+        for r in bad:
+            print(f"     {r['metric']}: baseline={r['baseline']!r} "
+                  f"fresh={r['fresh']!r} ({r['mode']}, tol={r['tolerance']})")
+        failed = failed or bool(bad)
+
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.report}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

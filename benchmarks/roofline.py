@@ -23,28 +23,27 @@ import argparse
 import glob
 import json
 import os
+import sys
 
-# TPU v5e constants (per chip)
-PEAK_FLOPS = 197e12        # bf16
-HBM_BW = 819e9             # B/s
-LINK_BW = 50e9             # B/s per ICI link
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# TPU v5e constants (per chip) — single source of truth in the accounting
+# module; re-exported here so existing `from roofline import PEAK_FLOPS`
+# call sites keep working
+from repro.observability.accounting import (HBM_BW, LINK_BW,  # noqa: F401
+                                            PEAK_FLOPS)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 
 
 def model_flops(arch: str, shape_kind: str, tokens: int, param_count: int):
-    """Matmul-visible params; MoE uses active-expert count."""
+    """Matmul-visible params; MoE uses active-expert count. Delegates to the
+    shared MODEL_FLOPS convention in repro.observability.accounting."""
     from repro.configs import get_config
+    from repro.observability import accounting
     cfg = get_config(arch)
-    n = param_count
-    if not cfg.tied_embeddings:
-        n -= cfg.padded_vocab * cfg.d_model       # input lookup is gather-free
-    if cfg.num_experts:
-        per_expert = (3 if cfg.gated else 2) * cfg.d_model * cfg.d_ff
-        inactive = (cfg.num_experts - cfg.top_k) * per_expert * cfg.num_layers
-        n -= inactive
-    mult = 6 if shape_kind == "train" else 2
-    return mult * n * tokens
+    return accounting.model_flops(cfg, param_count, tokens,
+                                  train=shape_kind == "train")
 
 
 def load_cells(results_dir: str = None):

@@ -16,7 +16,11 @@ One module, four execution strategies (``SparsityConfig.ffn_impl``):
                  peak-memory reduction of Table 1, natively in JAX.
 
 All impls return ``(y, aux)`` with ``aux = {l1, nnz_mean, nnz_max,
-neuron_active}`` feeding Eq. 2 and the Sec. 4.3 instrumentation.
+neuron_active, tile_frac}`` feeding Eq. 2, the Sec. 4.3 instrumentation,
+and the observability cost model (``repro.observability.accounting``).
+``tile_frac`` is the fraction of (row x twell_tile) cells holding any
+non-zero — the occupancy the tile-skip kernel and the analytic FLOPs
+model consume.
 """
 from __future__ import annotations
 
@@ -44,32 +48,27 @@ def init(key: jax.Array, d_model: int, d_ff: int, gated: bool,
     return params
 
 
-def _aux_from_h(h: jax.Array) -> Dict[str, jax.Array]:
-    nnz = (h != 0).sum(axis=-1)
+def _tile_frac(mask_n: jax.Array, tile: int) -> jax.Array:
+    """Fraction of (row x tile) cells with any active neuron. ``mask_n``:
+    bool, last axis = d_ff; ragged d_ff pads with dead columns."""
+    *lead, n = mask_n.shape
+    tile = max(1, min(int(tile), n))
+    nt = -(-n // tile)
+    pad = nt * tile - n
+    if pad:
+        mask_n = jnp.pad(mask_n, [(0, 0)] * len(lead) + [(0, pad)])
+    return mask_n.reshape(*lead, nt, tile).any(-1).mean().astype(jnp.float32)
+
+
+def _aux_from_h(h: jax.Array, tile: int) -> Dict[str, jax.Array]:
+    mask = h != 0
+    nnz = mask.sum(axis=-1)
     return {
         "l1": l1_loss(h),
         "nnz_mean": nnz.mean().astype(jnp.float32),
         "nnz_max": nnz.max().astype(jnp.int32),
-        "neuron_active": jnp.any(h != 0, axis=0),
-    }
-
-
-def _aux_from_packed(vals: jax.Array, idx: jax.Array, row_nnz: jax.Array,
-                     dense_rows: jax.Array, dense_map: jax.Array,
-                     n: int) -> Dict[str, jax.Array]:
-    m = vals.shape[0]
-    dn = (dense_rows != 0).sum(axis=-1)
-    nnz = row_nnz
-    total_abs = jnp.abs(vals.astype(jnp.float32)).sum() + \
-        jnp.abs(dense_rows.astype(jnp.float32)).sum()
-    active = jnp.zeros((n,), bool).at[idx.reshape(-1)].max(
-        vals.reshape(-1) != 0)
-    active = active | jnp.any(dense_rows != 0, axis=0)
-    return {
-        "l1": total_abs / (m * n),
-        "nnz_mean": nnz.mean().astype(jnp.float32),
-        "nnz_max": nnz.max().astype(jnp.int32),
-        "neuron_active": active,
+        "neuron_active": jnp.any(mask, axis=0),
+        "tile_frac": _tile_frac(mask, tile),
     }
 
 
@@ -89,7 +88,7 @@ def _dense_apply(params, x, scfg: SparsityConfig, gated: bool):
     # one all-reduce on y. No-op without a mesh (single-device serving/tests).
     h = shard_act(h, *([None] * (h.ndim - 1) + ["model"]))
     y = h @ params["wd"]
-    return y, _aux_from_h(h)
+    return y, _aux_from_h(h, scfg.twell_tile)
 
 
 # --------------------------------------------------------------------------- #
@@ -122,6 +121,8 @@ def _twell_apply(params, x, scfg: SparsityConfig, gated: bool):
         "nnz_max": nnz_rows.max().astype(jnp.int32),
         "neuron_active": jnp.zeros((tw.n,), bool).at[
             tw.indices.reshape(-1)].max(tw.values.reshape(-1) != 0),
+        # per-(row x tile) occupancy straight from the packed counts
+        "tile_frac": (tw.nnz > 0).mean().astype(jnp.float32),
     }
     return y, aux
 
@@ -137,7 +138,7 @@ def _tile_skip_apply(params, x, scfg: SparsityConfig, gated: bool):
     y, h = kops.tile_skip_ffn(x, params["wg"], params["wu"], params["wd"],
                               scfg.twell_tile, scfg.activation,
                               threshold=scfg.tile_skip_threshold)
-    return y, _aux_from_h(h)
+    return y, _aux_from_h(h, scfg.twell_tile)
 
 
 # --------------------------------------------------------------------------- #
@@ -308,6 +309,10 @@ def _hybrid_apply(params, x, scfg: SparsityConfig, gated: bool):
         "nnz_mean": row_nnz.astype(jnp.float32).mean(),
         "nnz_max": row_nnz.max().astype(jnp.int32),
         "neuron_active": active > 0,
+        # the packed stats are per-neuron, not per-(row x tile): report the
+        # batch-level tile occupancy (an upper bound on per-row occupancy)
+        # rather than widening the custom_vjp's residuals to recover it
+        "tile_frac": _tile_frac((active > 0)[None, :], scfg.twell_tile),
     }
     return y, aux
 

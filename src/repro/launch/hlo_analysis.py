@@ -159,20 +159,26 @@ def dot_flops(hlo: str) -> float:
 
 
 def _dot_contract_size(dot_line: str, comp_lines: List[str]) -> int:
-    """Product of lhs contracting dim sizes for one dot op."""
-    mo = re.search(r"dot\(%?([\w\.\-]+)", dot_line)
+    """Product of lhs contracting dim sizes for one dot op.
+
+    Handles both operand dialects: typed inline
+    (``dot(f32[4,16]{1,0} %x, ...)`` — what ``compile().as_text()`` emits)
+    and bare (``dot(%x, ...)``), which needs a def-line lookup."""
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", dot_line)
+    mo = re.search(r"dot\((?:(\w+\[[\d,]*\])(?:\{[\d,]*\})?\s+)?"
+                   r"%?([\w\.\-]+)", dot_line)
     if not (mo and mc):
         return 1
-    lhs_name = mo.group(1)
-    lhs_dims: List[int] = []
-    pat = re.compile(r"%?" + re.escape(lhs_name) +
-                     r"\s*=\s*(\w+\[[\d,]*\])")
-    for ln in comp_lines:
-        mm = pat.search(ln)
-        if mm:
-            lhs_dims = _shape_dims(mm.group(1))
-            break
+    lhs_dims: List[int] = _shape_dims(mo.group(1)) if mo.group(1) else []
+    if not lhs_dims:
+        lhs_name = mo.group(2)
+        pat = re.compile(r"%?" + re.escape(lhs_name) +
+                         r"\s*=\s*(\w+\[[\d,]*\])")
+        for ln in comp_lines:
+            mm = pat.search(ln)
+            if mm:
+                lhs_dims = _shape_dims(mm.group(1))
+                break
     contract = 1
     for ci in mc.group(1).split(","):
         if ci and lhs_dims and int(ci) < len(lhs_dims):

@@ -35,6 +35,7 @@ from repro.configs import get_config
 from repro.core.sparsity import targeted_reinit
 from repro.data.pipeline import SyntheticLM, make_iterator
 from repro.models import lm
+from repro.observability import RunLogger, SparsityReport, param_count
 from repro.optim import adamw
 from repro import training
 
@@ -58,6 +59,9 @@ def main(argv=None):
     ap.add_argument("--watchdog-factor", type=float, default=3.0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--run-log", default=None,
+                    help="append structured JSONL (meta/step/event records, "
+                         "incl. per-layer nnz and FLOPs/MFU accounting) here")
     ap.add_argument("--halt-at", type=int, default=0,
                     help="simulate preemption: checkpoint+exit at this step "
                          "while keeping the --steps LR schedule")
@@ -85,15 +89,37 @@ def main(argv=None):
     data = SyntheticLM(cfg.vocab_size, args.batch, args.seq, seed=tcfg.seed)
     ever_active = jnp.zeros((max(cfg.num_layers, 1), cfg.d_ff), bool)
 
+    n_params = param_count(params)
+    tokens_per_step = args.batch * args.seq
+    runlog = None
+    if args.run_log:
+        runlog = RunLogger(args.run_log, console=True, meta={
+            "arch": cfg.name, "reduced": args.reduced,
+            "d_model": cfg.d_model, "d_ff": cfg.d_ff,
+            "num_layers": cfg.num_layers, "ffn_impl": cfg.sparsity.ffn_impl,
+            "l1_coeff": cfg.sparsity.l1_coeff, "steps": args.steps,
+            "batch": args.batch, "seq": args.seq, "n_params": n_params,
+            "jax_version": jax.__version__})
+
+    def _event(event, message, **fields):
+        # events flow through the run log when enabled (which echoes the
+        # console line itself); bare print otherwise
+        if runlog is not None:
+            runlog.event(event, message=message, **fields)
+        else:
+            print(f"[train] {message}", flush=True)
+
     mgr = CheckpointManager(args.ckpt_dir, keep=tcfg.keep_checkpoints)
     start_step = 0
     resumed = mgr.restore_latest((params, opt_state, ever_active))
     if resumed is not None:
         start_step, (params, opt_state, ever_active), extra = resumed
         data = make_iterator(extra["data"])
-        print(f"[train] resumed from step {start_step}")
+        _event("resume", f"resumed from step {start_step}", step=start_step)
 
-    step_fn = jax.jit(training.make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+    step_fn = jax.jit(
+        training.make_train_step(cfg, tcfg, layer_stats=runlog is not None),
+        donate_argnums=(0, 1))
     reinit_fn = jax.jit(targeted_reinit)
 
     # --- preemption handling -------------------------------------------------
@@ -111,7 +137,12 @@ def main(argv=None):
         t0 = time.time()
         batch = {k: jnp.asarray(v) for k, v in next(data).items()}
         params, opt_state, metrics = step_fn(params, opt_state, batch)
-        metrics = {k: float(v) for k, v in metrics.items()}
+        # layer_stats adds (L,)-shaped trajectories; keep the returned
+        # history scalar-only (tests and --metrics-out depend on it)
+        arrays = {k: np.asarray(v) for k, v in metrics.items()
+                  if getattr(v, "ndim", 0)}
+        metrics = {k: float(v) for k, v in metrics.items()
+                   if not getattr(v, "ndim", 0)}
 
         if args.dead_reinit and cfg.family == "dense":
             # Eq. 6: reinit gate columns that never fired this step
@@ -132,8 +163,37 @@ def main(argv=None):
             times.pop(0)
         med = statistics.median(times)
         if dt > args.watchdog_factor * med and len(times) > 5:
-            print(f"[watchdog] step {step} took {dt:.2f}s "
-                  f"(median {med:.2f}s) — straggler suspected", file=sys.stderr)
+            msg = (f"step {step} took {dt:.2f}s "
+                   f"(median {med:.2f}s) — straggler suspected")
+            print(f"[watchdog] {msg}", file=sys.stderr)
+            if runlog is not None:
+                runlog.event("watchdog", step=step, step_time_s=dt,
+                             median_s=med, factor=args.watchdog_factor,
+                             detail=msg)
+
+        if runlog is not None:
+            report = SparsityReport.build(
+                cfg, tokens_per_step, arrays["nnz_per_layer"],
+                tile_frac_per_layer=arrays["tile_frac_per_layer"],
+                dead_frac_per_layer=arrays["dead_frac_per_layer"],
+                ffn_present=arrays["ffn_present_per_layer"],
+                n_params=n_params, train=True)
+            runlog.step(
+                step, loss=metrics["loss"], ce=metrics["ce"],
+                l1=metrics["l1"], l1_coeff=metrics["l1_coeff"],
+                nnz_mean=metrics["nnz_mean"],
+                nnz_per_layer=arrays["nnz_per_layer"],
+                dead_frac_per_layer=arrays["dead_frac_per_layer"],
+                tile_frac_per_layer=arrays["tile_frac_per_layer"],
+                mean_sparsity=report.mean_sparsity,
+                ffn_effective_flops=report.ffn_effective_flops,
+                ffn_dense_flops=report.ffn_dense_flops,
+                model_effective_flops=report.model_effective_flops,
+                model_dense_flops=report.model_dense_flops,
+                flops_reduction=report.flops_reduction(),
+                step_time_s=dt,
+                tokens_per_s=tokens_per_step / max(dt, 1e-9),
+                mfu=report.mfu_estimate(dt))
 
         history.append({"step": step, **metrics})
         if step % args.log_every == 0:
@@ -147,7 +207,9 @@ def main(argv=None):
             mgr.save(step + 1, (params, opt_state, ever_active),
                      extra={"data": data.state(), "arch": cfg.name})
         if stop["flag"]:
-            print(f"[train] SIGTERM: checkpointed at step {step + 1}, exiting")
+            _event("sigterm",
+                   f"SIGTERM: checkpointed at step {step + 1}, exiting",
+                   step=step + 1)
             break
 
     mgr.save(args.steps if not stop["flag"] else step + 1,
@@ -157,7 +219,10 @@ def main(argv=None):
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f)
-    print(f"[train] done; final loss {history[-1]['loss']:.4f}")
+    _event("done", f"done; final loss {history[-1]['loss']:.4f}",
+           step=history[-1]["step"], loss=history[-1]["loss"])
+    if runlog is not None:
+        runlog.close()
     return history
 
 

@@ -28,7 +28,8 @@ from repro.models.layers import (attention, attn_init, embed_init,
                                  embed_lookup, lm_logits, norm_apply,
                                  norm_init)
 
-AUX0 = ("l1", "nnz_mean", "nnz_max", "neuron_active", "ffn_present")
+AUX0 = ("l1", "nnz_mean", "nnz_max", "neuron_active", "ffn_present",
+        "tile_frac")
 
 
 def _dtype(cfg):
@@ -39,7 +40,8 @@ def _zero_aux(cfg) -> Dict[str, jax.Array]:
     return {"l1": jnp.float32(0), "nnz_mean": jnp.float32(0),
             "nnz_max": jnp.int32(0),
             "neuron_active": jnp.zeros((cfg.d_ff,), bool),
-            "ffn_present": jnp.float32(0), "moe_balance": jnp.float32(0)}
+            "ffn_present": jnp.float32(0), "moe_balance": jnp.float32(0),
+            "tile_frac": jnp.float32(0)}
 
 
 def _mark(aux: Dict) -> Dict:
@@ -470,7 +472,8 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
 
 
 def _paged_scan(params, x, pools, cfg, positions, block_tables, seq_lens,
-                num_new=None, write_valid=None, last_rows=None):
+                num_new=None, write_valid=None, last_rows=None,
+                collect_aux=False):
     fam = cfg.family
 
     def body(xc, pk):
@@ -481,12 +484,20 @@ def _paged_scan(params, x, pools, cfg, positions, block_tables, seq_lens,
             lc["num_new"] = num_new
         if write_valid is not None:
             lc["write_valid"] = write_valid
-        xc, _, nc = _block_apply(p, xc, cfg, positions, kind="causal",
-                                 use_moe=fam == "moe", cache=lc)
-        return xc, (nc["kpool"], nc["vpool"])
+        xc, aux, nc = _block_apply(p, xc, cfg, positions, kind="causal",
+                                   use_moe=fam == "moe", cache=lc)
+        ys = (nc["kpool"], nc["vpool"])
+        if collect_aux:
+            # two scalars per layer; cheap enough to ship every probed step
+            ys += ({"nnz_mean": aux["nnz_mean"],
+                    "tile_frac": aux["tile_frac"],
+                    "ffn_present": aux["ffn_present"]},)
+        return xc, ys
 
-    x, (kps, vps) = jax.lax.scan(
+    x, ys = jax.lax.scan(
         body, x, (params["blocks"], pools["kpool"], pools["vpool"]))
+    kps, vps = ys[0], ys[1]
+    aux_stack = ys[2] if collect_aux else None
     if last_rows is not None:
         # keep only each row's last valid hidden state before the O(V) head:
         # the engine samples one token per request, so materializing
@@ -498,13 +509,17 @@ def _paged_scan(params, x, pools, cfg, positions, block_tables, seq_lens,
     # / sampler reduces them device-side — only the winning token row ever
     # crosses back to host
     logits = shard_act(lm_logits(x, head), None, None, "model")
-    return logits, {"kpool": kps, "vpool": vps}
+    pools_out = {"kpool": kps, "vpool": vps}
+    if collect_aux:
+        return logits, aux_stack, pools_out
+    return logits, pools_out
 
 
 def paged_prefill(params: Dict, pools: Dict, block_tables: jax.Array,
                   tokens: jax.Array, num_new: jax.Array,
                   cfg: ModelConfig, start_lens: Optional[jax.Array] = None,
-                  last_only: bool = False) -> Tuple[jax.Array, Dict]:
+                  last_only: bool = False,
+                  collect_aux: bool = False) -> Tuple[jax.Array, Dict]:
     """Prefill a prompt chunk into the paged pool, appending to any cached
     history (the same chunk-append-with-history regime ``paged_verify``
     uses — chunked prefill, prefix-cache reuse, and speculative verify are
@@ -523,6 +538,11 @@ def paged_prefill(params: Dict, pools: Dict, block_tables: jax.Array,
     ``last_only=True`` gathers each row's last valid hidden state *before*
     the vocab projection and returns (B, 1, V) — the serving path, which
     only ever samples the last position.
+
+    ``collect_aux=True`` additionally returns a per-layer sparsity probe —
+    ``(logits, {"nnz_mean": (L,), "tile_frac": (L,), "ffn_present": (L,)},
+    pools)`` — for the serving telemetry's FLOPs accounting. The probe is
+    extra scan outputs only; logits and pools are bit-identical either way.
     """
     x = embed_lookup(params["embed"], tokens)
     if start_lens is None:
@@ -531,13 +551,15 @@ def paged_prefill(params: Dict, pools: Dict, block_tables: jax.Array,
     last_rows = jnp.clip(num_new - 1, 0, tokens.shape[1] - 1) if last_only \
         else None
     return _paged_scan(params, x, pools, cfg, positions, block_tables,
-                       start_lens, num_new=num_new, last_rows=last_rows)
+                       start_lens, num_new=num_new, last_rows=last_rows,
+                       collect_aux=collect_aux)
 
 
 def paged_decode_step(params: Dict, pools: Dict, block_tables: jax.Array,
                       seq_lens: jax.Array, tokens: jax.Array,
                       cfg: ModelConfig,
-                      write_valid: Optional[jax.Array] = None
+                      write_valid: Optional[jax.Array] = None,
+                      collect_aux: bool = False
                       ) -> Tuple[jax.Array, Dict]:
     """Continuous-batching decode: one token per running request against the
     shared paged pool. tokens: (B, 1); seq_lens: (B,) cached lengths (the new
@@ -549,7 +571,8 @@ def paged_decode_step(params: Dict, pools: Dict, block_tables: jax.Array,
     x = embed_lookup(params["embed"], tokens)
     positions = seq_lens[:, None]
     return _paged_scan(params, x, pools, cfg, positions, block_tables,
-                       seq_lens, write_valid=write_valid)
+                       seq_lens, write_valid=write_valid,
+                       collect_aux=collect_aux)
 
 
 def paged_verify(params: Dict, pools: Dict, block_tables: jax.Array,

@@ -58,6 +58,7 @@ def _reduce_aux(aux_e: Dict, extra: Dict) -> Dict:
         "nnz_mean": aux_e["nnz_mean"].mean(),
         "nnz_max": aux_e["nnz_max"].max(),
         "neuron_active": jnp.any(aux_e["neuron_active"], axis=0),
+        "tile_frac": aux_e["tile_frac"].mean(),
     }
     out.update(extra)
     return out
@@ -210,6 +211,7 @@ def moe_apply_sorted(params: Dict, x: jax.Array, cfg, scfg, gated: bool,
                 aux["neuron_active"].astype(jnp.int32), dp_axes).astype(bool),
             "moe_balance": jax.lax.pmean(aux["moe_balance"], dp_axes),
             "moe_drop_frac": jax.lax.pmean(aux["moe_drop_frac"], dp_axes),
+            "tile_frac": jax.lax.pmean(aux["tile_frac"], dp_axes),
         }
         return yt.astype(xl.dtype).reshape(xl.shape), aux
 
@@ -220,7 +222,7 @@ def moe_apply_sorted(params: Dict, x: jax.Array, cfg, scfg, gated: bool,
         out_specs=(P(dp, None, None),
                    {"l1": P(), "nnz_mean": P(), "nnz_max": P(),
                     "neuron_active": P(), "moe_balance": P(),
-                    "moe_drop_frac": P()}),
+                    "moe_drop_frac": P(), "tile_frac": P()}),
         axis_names=set(dp_axes), check_vma=False)
     return fn(x, router_in, experts_in)
 

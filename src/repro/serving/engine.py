@@ -89,6 +89,7 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.distributed import sharding
 from repro.models import lm
+from repro.observability import accounting
 from repro.serving import sampling as sampling_mod
 from repro.serving.backends import (DECODE, PREFILL, get_backend,
                                     make_draft_pair)
@@ -222,6 +223,13 @@ class ServingEngine:
             if spec is not None:
                 self.drafter.on_compile = telemetry.on_compile
                 self.verifier.on_compile = telemetry.on_compile
+            # arm the sparsity/compute cost model: the decode/prefill entry
+            # points collect a per-layer (nnz, tile_frac) probe as extra
+            # scan outputs (logits are bit-identical with or without it)
+            telemetry.attach_compute(
+                cfg, accounting.param_count(params),
+                chips=1 if mesh is None else mesh.devices.size)
+        self._probe = telemetry is not None
         self.prefilling: List[Request] = []
         self.running: List[Request] = []
         self.stats: List[StepStats] = []
@@ -474,20 +482,25 @@ class ServingEngine:
             if self.telemetry is not None:
                 self.telemetry.on_compile("decode")
             cfg = self.cfg_decode
+            probe = self._probe
 
-            # (bt, sl, toks, keys, temps, topks, topps) in; (tok, last) out
+            # (bt, sl, toks, keys, temps, topks, topps) in;
+            # (tok, last[, ffn_aux]) out — the probe rides as extra scan
+            # outputs and never feeds back into the logits
             @functools.partial(jax.jit, donate_argnums=(1,),
-                               **self._jit_kwargs(7, 2))
+                               **self._jit_kwargs(7, 3 if probe else 2))
             def fn(params, pools, bt, sl, toks, keys, temps, topks, topps):
-                logits, pools = lm.paged_decode_step(params, pools, bt, sl,
-                                                     toks, cfg)
+                out = lm.paged_decode_step(params, pools, bt, sl, toks, cfg,
+                                           collect_aux=probe)
+                logits, aux, pools = out if probe else (out[0], None, out[1])
                 last = logits[:, -1]
                 # all-greedy fast path: skip the O(V log V) top-k sort and
                 # categorical draw entirely (the hot serving configuration)
                 tok = jnp.argmax(last, -1).astype(jnp.int32) if greedy else \
                     sampling_mod.sample_tokens(last, keys, temps, topks,
                                                topps)
-                return tok, last, pools
+                return (tok, last, aux, pools) if probe else \
+                    (tok, last, pools)
             self._decode_fns[(padded_batch, greedy)] = fn
         return self._decode_fns[(padded_batch, greedy)]
 
@@ -498,24 +511,26 @@ class ServingEngine:
             if self.telemetry is not None:
                 self.telemetry.on_compile("prefill")
             cfg = self.cfg_prefill
+            probe = self._probe
 
             # (bt, toks, start, num_new, keys, temps, topks, topps) in;
-            # (tok, last) out
+            # (tok, last[, ffn_aux]) out
             @functools.partial(jax.jit, donate_argnums=(1,),
-                               **self._jit_kwargs(8, 2))
+                               **self._jit_kwargs(8, 3 if probe else 2))
             def fn(params, pools, bt, toks, start, num_new, keys, temps,
                    topks, topps):
                 # last_only: the head runs on each row's final valid hidden
                 # state only — never (B, C, V) over the whole chunk
-                logits, pools = lm.paged_prefill(params, pools, bt, toks,
-                                                 num_new, cfg,
-                                                 start_lens=start,
-                                                 last_only=True)
+                out = lm.paged_prefill(params, pools, bt, toks, num_new, cfg,
+                                       start_lens=start, last_only=True,
+                                       collect_aux=probe)
+                logits, aux, pools = out if probe else (out[0], None, out[1])
                 last = logits[:, 0]
                 tok = jnp.argmax(last, -1).astype(jnp.int32) if greedy else \
                     sampling_mod.sample_tokens(last, keys, temps, topks,
                                                topps)
-                return tok, last, pools
+                return (tok, last, aux, pools) if probe else \
+                    (tok, last, pools)
             self._prefill_fns[key] = fn
         return self._prefill_fns[key]
 
@@ -590,6 +605,19 @@ class ServingEngine:
         return (self.spec is not None and not req.no_spec
                 and req.max_tokens - len(req.output_tokens) >= 2)
 
+    def _publish_ffn(self, ffn_aux, tokens: int, cfg_phase) -> None:
+        """Hand a probed forward's per-layer (nnz, tile_frac) stack to the
+        telemetry cost model. ``tokens`` is the REAL token count (padding
+        rows contribute to the averaged stats but not to FLOPs credit)."""
+        if ffn_aux is None or self.telemetry is None:
+            return
+        self.telemetry.on_ffn(
+            tokens,
+            np.asarray(ffn_aux["nnz_mean"], np.float64),
+            tile_frac_per_layer=np.asarray(ffn_aux["tile_frac"], np.float64),
+            ffn_present=np.asarray(ffn_aux["ffn_present"], np.float64),
+            impl=cfg_phase.sparsity.ffn_impl)
+
     def _decode(self, batch: List[Request]):
         b = len(batch)
         padded = _bucket(b, 1, self.max_batch)
@@ -624,12 +652,17 @@ class ServingEngine:
             keys = keys.at[:b].set(sampling_mod.batch_keys(base, pos))
         with self._mesh_ctx():
             fn = self._jit_decode(padded, all_greedy)
-            next_toks, logits, self.kv.pools = fn(
+            out = fn(
                 self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl),
                 jnp.asarray(toks), keys, jnp.asarray(temps),
                 jnp.asarray(topks), jnp.asarray(topps))
+            if self._probe:
+                next_toks, logits, ffn_aux, self.kv.pools = out
+            else:
+                (next_toks, logits, self.kv.pools), ffn_aux = out, None
         self._sync(next_toks)
         next_toks = np.asarray(next_toks)
+        self._publish_ffn(ffn_aux, b, self.cfg_decode)
         events: List[StepEvent] = []
         now = time.perf_counter()
         for i, r in enumerate(batch):
@@ -921,13 +954,18 @@ class ServingEngine:
             keys = keys.at[:b].set(sampling_mod.batch_keys(base, pos))
         with self._mesh_ctx():
             fn = self._jit_prefill(padded_b, padded_c, all_greedy)
-            tok, logits, self.kv.pools = fn(
+            out = fn(
                 self.params, self.kv.pools, jnp.asarray(bt),
                 jnp.asarray(toks), jnp.asarray(start), jnp.asarray(num_new),
                 keys, jnp.asarray(temps), jnp.asarray(topks),
                 jnp.asarray(topps))
+            if self._probe:
+                tok, logits, ffn_aux, self.kv.pools = out
+            else:
+                (tok, logits, self.kv.pools), ffn_aux = out, None
         self._sync(tok)
         tok = np.asarray(tok)
+        self._publish_ffn(ffn_aux, sum(chunk_lens), self.cfg_prefill)
         events: List[StepEvent] = []
         for i, r in enumerate(rows):
             r.prefill_pos += chunk_lens[i]

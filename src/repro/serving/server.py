@@ -307,4 +307,14 @@ class ServingServer:
                "cached_tokens_total": e.cached_tokens_total}
         if e.telemetry is not None:
             out["telemetry"] = e.telemetry.summary()
+            sp = out["telemetry"].get("sparsity")
+            if sp is not None:
+                # compact operator-facing rollup (the full per-layer detail
+                # stays under telemetry.sparsity)
+                out["sparsity"] = {
+                    "mean_ffn_sparsity": sp["mean_ffn_sparsity"],
+                    "mfu": sp["mfu"],
+                    "flops_reduction": sp["flops_reduction"],
+                    "tokens_per_joule_proxy": sp["tokens_per_joule_proxy"],
+                }
         return out

@@ -30,6 +30,7 @@ import time
 from bisect import bisect_left
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro.observability import accounting
 from repro.serving.trace import (SPAN_CANCEL, SPAN_DECODE, SPAN_FINISH,
                                  SPAN_PREEMPT, SPAN_PREFILL, SPAN_QUEUED,
                                  SPAN_SPEC, TraceRecorder)
@@ -337,6 +338,30 @@ class ServingMetrics:
             "serving_build_info",
             "Engine build configuration (value is always 1)",
             ("backend", "scheduler", "spec_k", "tp"))
+        self.ffn_sparsity = r.gauge(
+            "serving_ffn_sparsity",
+            "Per-layer FFN activation sparsity (1 - nnz/d_ff) from the most "
+            "recent probed forward", ("layer",))
+        self.tile_occupancy = r.histogram(
+            "serving_tile_occupancy_ratio",
+            "Per-probed-forward fraction of (row x tile) activation cells "
+            "with any live neuron (what tile_skip cannot skip)",
+            buckets=RATIO_BUCKETS)
+        self.effective_flops_total = r.counter(
+            "serving_effective_flops_total",
+            "Model FLOPs under the analytic sparse cost model, summed over "
+            "probed forwards")
+        self.dense_flops_total = r.counter(
+            "serving_dense_flops_total",
+            "Dense-equivalent model FLOPs for the same probed forwards")
+        self.mfu = r.gauge(
+            "serving_mfu",
+            "Live MFU estimate: dense-equivalent FLOPs of the last step "
+            "over wall time x chips x peak")
+        self.tokens_per_joule = r.gauge(
+            "serving_tokens_per_joule_proxy",
+            "Committed tokens per joule at chip TDP (an energy proxy, not "
+            "a measurement)")
 
 
 class Telemetry:
@@ -358,6 +383,11 @@ class Telemetry:
             if trace else None
         self._last_token_t: Dict[int, float] = {}   # rid -> last commit time
         self._kv_prev = {"cow": 0, "evict": 0}      # counter deltas
+        self._compute: Optional[Dict] = None        # armed by attach_compute
+        self._win_flops = 0.0                       # dense-equiv, this step
+        self._win_tokens = 0                        # committed, this step
+        self._sparsity_sum = 0.0                    # running mean numerator
+        self._sparsity_n = 0
 
     # ---- request lifecycle -------------------------------------------------
 
@@ -406,6 +436,7 @@ class Telemetry:
             return
         now = time.perf_counter() if now is None else now
         self.metrics.tokens_total.inc(n)
+        self._win_tokens += n
         tier = str(req.priority)
         last = self._last_token_t.get(req.rid)
         if last is None:
@@ -428,6 +459,39 @@ class Telemetry:
         if self.trace is not None and req.spans is not None:
             self.trace.instant(req, SPAN_SPEC, drafted=drafted,
                                accepted=accepted)
+
+    # ---- sparsity / compute accounting -------------------------------------
+
+    def attach_compute(self, cfg, n_params: int, chips: int = 1) -> None:
+        """Arm the sparsity/compute cost model. The engine calls this once
+        at build time when sparsity probing is enabled; ``on_ffn`` and the
+        MFU/energy gauges stay inert until it does."""
+        self._compute = {"cfg": cfg, "n_params": int(n_params),
+                         "chips": int(chips)}
+
+    def on_ffn(self, tokens: int, nnz_per_layer, tile_frac_per_layer=None,
+               ffn_present=None, impl: Optional[str] = None) -> None:
+        """Per-layer sparsity probe from one forward over ``tokens`` tokens
+        (host-side floats/arrays; never traced values). Publishes the
+        per-layer gauges, tile-occupancy histogram, and FLOPs counters.
+        ``impl`` overrides the attached cfg's ffn_impl (the engine's
+        backends reconfigure it per phase)."""
+        if self._compute is None or tokens <= 0:
+            return
+        c = self._compute
+        report = accounting.SparsityReport.build(
+            c["cfg"], tokens, nnz_per_layer, impl=impl,
+            tile_frac_per_layer=tile_frac_per_layer, ffn_present=ffn_present,
+            n_params=c["n_params"], train=False, chips=c["chips"])
+        m = self.metrics
+        for lc in report.present_layers:
+            m.ffn_sparsity.set(lc.sparsity, layer=str(lc.layer))
+            m.tile_occupancy.observe(lc.tile_frac)
+        m.effective_flops_total.inc(max(report.model_effective_flops, 0.0))
+        m.dense_flops_total.inc(max(report.model_dense_flops, 0.0))
+        self._win_flops += report.model_dense_flops
+        self._sparsity_sum += report.mean_sparsity
+        self._sparsity_n += 1
 
     # ---- engine step -------------------------------------------------------
 
@@ -460,6 +524,12 @@ class Telemetry:
             if delta > 0:
                 m.kv_events_total.inc(delta, event=event)
             self._kv_prev[event] = occ[key]
+        if self._compute is not None:
+            chips = self._compute["chips"]
+            m.mfu.set(accounting.mfu(self._win_flops, wall_s, chips))
+            m.tokens_per_joule.set(accounting.tokens_per_joule(
+                self._win_tokens, wall_s, chips))
+            self._win_flops, self._win_tokens = 0.0, 0
 
     # ---- summaries ---------------------------------------------------------
 
@@ -481,7 +551,26 @@ class Telemetry:
         computed = m.prefix_tokens_total.value(source="computed")
         drafted = m.spec_tokens_total.value(outcome="drafted")
         accepted = m.spec_tokens_total.value(outcome="accepted")
+        sparsity = None
+        if self._compute is not None:
+            dense = m.dense_flops_total.value()
+            eff = m.effective_flops_total.value()
+            sparsity = {
+                "mean_ffn_sparsity":
+                    self._sparsity_sum / self._sparsity_n
+                    if self._sparsity_n else None,
+                "per_layer_sparsity": {
+                    ls["layer"]: m.ffn_sparsity.value(**ls)
+                    for ls in m.ffn_sparsity.label_sets()},
+                "tile_occupancy_hist": m.tile_occupancy.snapshot(),
+                "effective_flops_total": eff,
+                "dense_flops_total": dense,
+                "flops_reduction": 1.0 - eff / dense if dense else None,
+                "mfu": m.mfu.value(),
+                "tokens_per_joule_proxy": m.tokens_per_joule.value(),
+            }
         return {
+            "sparsity": sparsity,
             "phases_ms_mean": self.phase_ms_mean(),
             "steps": m.steps_total.value(),
             "tokens_generated": m.tokens_total.value(),

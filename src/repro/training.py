@@ -14,11 +14,29 @@ from repro.models import lm
 from repro.optim import adamw
 
 
-def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+def per_layer_stats(aux: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Per-layer (L,) sparsity trajectories from the stacked block aux.
+    Array-valued — downstream consumers (the JSONL run log) must not
+    ``float()`` these."""
+    return {
+        "nnz_per_layer": aux["nnz_mean"].astype(jnp.float32),
+        "dead_frac_per_layer":
+            1.0 - aux["neuron_active"].astype(jnp.float32).mean(-1),
+        "tile_frac_per_layer": aux["tile_frac"].astype(jnp.float32),
+        "ffn_present_per_layer": aux["ffn_present"].astype(jnp.float32),
+    }
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    layer_stats: bool = False):
     """Returns train_step(params, opt_state, batch) -> (params, opt_state,
     metrics). The L1 coefficient follows the App. C.3 warm-up schedule when
     configured; microbatching accumulates gradients (XLA overlaps the
-    FSDP collectives across microbatch steps)."""
+    FSDP collectives across microbatch steps).
+
+    ``layer_stats=True`` adds per-layer (L,)-shaped entries from
+    :func:`per_layer_stats` to the metrics dict (from the first microbatch
+    when accumulating — a probe, not an average)."""
 
     def grads_of(params, batch, l1c):
         (loss, (metrics, aux)), grads = jax.value_and_grad(
@@ -45,13 +63,14 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
 
             acc_dt = jnp.dtype(tcfg.grad_accum_dtype)
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
-            g1, m1, _ = grads_of(params, jax.tree.map(lambda t: t[0], mb), l1c)
+            g1, m1, aux = grads_of(
+                params, jax.tree.map(lambda t: t[0], mb), l1c)
             m0 = jax.tree.map(lambda x: jnp.zeros_like(x), m1)
             (grads, msum), _ = jax.lax.scan(acc, (g0, m0), mb)
             grads = jax.tree.map(lambda g: (g / nmb).astype(jnp.float32), grads)
             metrics = jax.tree.map(lambda m: m / nmb, msum)
         else:
-            grads, metrics, _ = grads_of(params, batch, l1c)
+            grads, metrics, aux = grads_of(params, batch, l1c)
 
         grads, gnorm = adamw.clip_by_global_norm(grads, tcfg.max_grad_norm)
         lr = adamw.cosine_schedule(step, tcfg.learning_rate,
@@ -61,6 +80,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
             beta2=tcfg.beta2, eps=tcfg.eps, weight_decay=tcfg.weight_decay)
         metrics = dict(metrics)
         metrics.update(grad_norm=gnorm, lr=lr, l1_coeff=l1c)
+        if layer_stats:
+            metrics.update(per_layer_stats(aux))
         return params, opt_state, metrics
 
     return train_step

@@ -194,6 +194,33 @@ def test_metrics_exposition(server):
     assert tm["jit_compiles"]["decode"] >= 1
 
 
+def test_stats_sparsity_rollup(server):
+    """An engine built with telemetry probes every forward: /metrics grows
+    the per-layer FFN sparsity gauges + FLOPs counters, and /v1/stats adds
+    the compact sparsity rollup next to the full telemetry block."""
+    srv, engine, cfg, params = server
+    prompt = np.random.RandomState(7).randint(0, cfg.vocab_size, 8).tolist()
+    _post(srv, "/v1/completions", {"prompt": prompt, "max_tokens": 3})
+    text = urllib.request.urlopen(_url(srv, "/metrics"),
+                                  timeout=10).read().decode()
+    assert 'serving_ffn_sparsity{layer="0"}' in text
+    assert f'serving_ffn_sparsity{{layer="{cfg.num_layers - 1}"}}' in text
+    assert "# TYPE serving_effective_flops_total counter" in text
+    assert "# TYPE serving_tile_occupancy_ratio histogram" in text
+    assert "serving_mfu" in text
+    assert "serving_tokens_per_joule_proxy" in text
+    stats = json.load(urllib.request.urlopen(_url(srv, "/v1/stats"),
+                                             timeout=10))
+    sp = stats["sparsity"]                       # compact rollup
+    assert 0.0 <= sp["mean_ffn_sparsity"] <= 1.0
+    assert sp["flops_reduction"] is not None
+    assert sp["mfu"] >= 0.0 and sp["tokens_per_joule_proxy"] >= 0.0
+    full = stats["telemetry"]["sparsity"]        # full block
+    assert len(full["per_layer_sparsity"]) == cfg.num_layers
+    assert full["dense_flops_total"] >= full["effective_flops_total"] > 0
+    assert full["tile_occupancy_hist"]["count"] > 0
+
+
 def test_metrics_503_when_disabled():
     """An engine built without telemetry serves 503 on /metrics (and no
     telemetry block in /v1/stats) instead of crashing."""
@@ -209,6 +236,7 @@ def test_metrics_503_when_disabled():
         stats = json.load(urllib.request.urlopen(_url(srv, "/v1/stats"),
                                                  timeout=10))
         assert "telemetry" not in stats
+        assert "sparsity" not in stats
     finally:
         srv.shutdown()
 
