@@ -18,6 +18,12 @@ time is the compile cost, the measured replay is steady state, and within
 steady state every engine step records wall vs device-sync milliseconds
 (wall - sync = host-side scheduling overhead).
 
+A pipeline section re-runs the main workload and the churn workload through
+the overlapped plan/launch/collect step path with the bucket-grid warmup,
+asserting greedy token identity with the synchronous engine and that the
+jit-compile counters stay flat after warmup (zero steady-state compiles),
+and reporting the residual sync_ms plus the measured plan/device overlap.
+
 With ``--tp N`` every engine runs under an N-way tensor-parallel mesh
 (params + paged KV pools sharded over the model axis), and a third section
 asserts greedy outputs are token-identical to the unsharded engine — with
@@ -120,15 +126,29 @@ def make_churn_workload(num_requests: int, vocab: int, seed: int,
 
 def run_churn(params, cfg, work, *, backend: str, scheduler: str,
               block_size: int, max_batch: int, max_seq_len: int,
-              num_blocks=None, prefill_chunk: int = 64, mesh=None):
+              num_blocks=None, prefill_chunk: int = 64, mesh=None,
+              pipeline: bool = False, warmup: bool = False,
+              telemetry: bool = False, trace_out=None):
     """Replay a churn workload through one engine via the handle/event API,
     timing every TOKEN event for tail-latency stats. Asserts the KV pool
-    drains invariant-clean with zero leaked blocks."""
+    drains invariant-clean with zero leaked blocks. With ``warmup`` the
+    bucket grid precompiles first and the result records the jit-compile
+    counters at the warmup/steady boundary, so callers can assert the whole
+    churn replay (admissions, cancels, preemptions, every batch size)
+    compiled nothing."""
     engine = ServingEngine(params, cfg, backend=backend,
                            block_size=block_size, num_blocks=num_blocks,
                            max_batch=max_batch, max_seq_len=max_seq_len,
                            prefill_chunk=prefill_chunk, scheduler=scheduler,
-                           mesh=mesh)
+                           mesh=mesh, pipeline=pipeline,
+                           telemetry=Telemetry(trace=bool(trace_out))
+                           if telemetry or trace_out else None)
+    if warmup:
+        engine.warmup()
+    compiles_after_warmup = None
+    if engine.telemetry is not None:
+        compiles_after_warmup = dict(
+            engine.telemetry.summary()["jit_compiles"])
     handles, token_times, cancel_at, outs = {}, {}, {}, {}
     pending = list(work)
     step = 0
@@ -179,10 +199,20 @@ def run_churn(params, cfg, work, *, backend: str, scheduler: str,
                 "itl_p95_ms": pct_ms(itls, 95)}
 
     cancelled = [o for o in outs.values() if o.finish_reason == "cancelled"]
+    compiles_total = None
+    if engine.telemetry is not None:
+        compiles_total = dict(engine.telemetry.summary()["jit_compiles"])
+        if trace_out:
+            engine.export_trace(trace_out)
+            print(f"# churn chrome trace -> {trace_out}")
     return {"scheduler": scheduler, "steps": step,
             "requests": len(work),
             "cancelled": len(cancelled),
             "preempted": engine.preempted_total,
+            "pipeline": pipeline,
+            "warmup_shapes": len(engine.warmup_report),
+            "jit_compiles_after_warmup": compiles_after_warmup,
+            "jit_compiles_total": compiles_total,
             "tiers": {"hi": tier_stats(1), "lo": tier_stats(0)},
             "outputs": {rid: o.token_ids for rid, o in outs.items()
                         if o.finish_reason != "cancelled"}}
@@ -191,14 +221,19 @@ def run_churn(params, cfg, work, *, backend: str, scheduler: str,
 def run_backend(params, cfg, backend: str, work, *, block_size: int,
                 max_batch: int, max_seq_len: int, prefix_cache: bool = True,
                 prefill_chunk: int = 64, mesh=None, spec=None,
-                telemetry: bool = False, trace_out=None):
+                telemetry: bool = False, trace_out=None,
+                pipeline: bool = False, warmup: bool = False):
     engine = ServingEngine(params, cfg, backend=backend,
                            block_size=block_size, max_batch=max_batch,
                            max_seq_len=max_seq_len,
                            prefix_cache=prefix_cache,
                            prefill_chunk=prefill_chunk, mesh=mesh, spec=spec,
+                           pipeline=pipeline,
                            telemetry=Telemetry() if telemetry or trace_out
                            else None)
+    if warmup:
+        engine.warmup()    # before the compile-replay: its wall time is the
+        # (exhaustive) compile cost, so compile_wall below stays ~0
 
     def reset_cache():
         # measured run starts from a cold cache so hit rates reflect sharing
@@ -241,6 +276,7 @@ def run_backend(params, cfg, backend: str, work, *, block_size: int,
     prompt_toks = engine.prompt_tokens_total
     step_wall = np.array([s.wall_ms for s in engine.stats])
     step_sync = np.array([s.sync_ms for s in engine.stats])
+    step_overlap = np.array([s.overlap_ms for s in engine.stats])
     telemetry_summary = None
     if engine.telemetry is not None:
         # covers warmup + measured replays (jit compile counts only make
@@ -264,6 +300,10 @@ def run_backend(params, cfg, backend: str, work, *, block_size: int,
             "step_wall_ms_p90": float(np.percentile(step_wall, 90)),
             "step_sync_ms_mean": float(step_sync.mean()),
             "sync_frac": float(step_sync.sum() / max(step_wall.sum(), 1e-9)),
+            "pipeline": pipeline,
+            "warmup_shapes": len(engine.warmup_report),
+            "warmup_seconds": engine.warmup_seconds,
+            "step_overlap_ms_mean": float(step_overlap.mean()),
             "prefix_cache": prefix_cache,
             "prompt_tokens": prompt_toks,
             "prefill_tokens": engine.prefill_tokens_total,
@@ -376,6 +416,40 @@ def main(argv=None):
     print(f"# telemetry: {int(tm['tokens_generated'])} tokens over "
           f"{int(tm['steps'])} steps, {tm['trace_events']} trace events")
 
+    # ---- pipelined step path: identity, overlap, warmup compile flatness --
+    # the same workload through the plan/launch/collect pipeline with the
+    # bucket grid precompiled at startup: greedy outputs must be token-
+    # identical to the synchronous run, and NOTHING may JIT-compile after
+    # warmup (every steady-state shape is a warmup shape). sync_ms in
+    # pipelined mode is the residual blocking left after the async device→
+    # host token copy overlaps with next-step planning; on CPU the drop vs
+    # the synchronous path is noise-dominated, so it is reported, not gated.
+    pipe_trace = None
+    if args.trace_out:
+        root, ext = os.path.splitext(args.trace_out)
+        pipe_trace = root + ".pipeline" + (ext or ".json")
+    pipe_run = run_backend(params, cfg, backend0, work,
+                           block_size=args.block_size,
+                           max_batch=args.max_batch, max_seq_len=max_seq_len,
+                           prefill_chunk=args.prefill_chunk, mesh=mesh,
+                           telemetry=True, pipeline=True, warmup=True,
+                           trace_out=pipe_trace)
+    assert pipe_run["outputs"] == base["outputs"], \
+        "pipelined engine changed greedy outputs"
+    pipe_compiles = sum(pipe_run["telemetry"]["jit_compiles"].values())
+    steady_compiles = int(pipe_compiles) - pipe_run["warmup_shapes"]
+    assert steady_compiles == 0, (
+        f"{steady_compiles} JIT compiles AFTER warmup — the bucket grid "
+        f"precompile missed a steady-state shape")
+    sync_drop = 1 - pipe_run["step_sync_ms_mean"] / \
+        max(base["step_sync_ms_mean"], 1e-9)
+    print(f"# pipeline on-vs-off ({backend0}): outputs identical, "
+          f"{pipe_run['warmup_shapes']} shapes warmed in "
+          f"{pipe_run['warmup_seconds']:.1f}s, 0 steady-state compiles; "
+          f"sync {base['step_sync_ms_mean']:.2f} -> "
+          f"{pipe_run['step_sync_ms_mean']:.2f}ms mean ({sync_drop:+.1%}), "
+          f"overlap {pipe_run['step_overlap_ms_mean']:.2f}ms/step")
+
     # ---- shared-system-prompt workload: prefix caching on vs off ----------
     shared = make_shared_prefix_workload(args.shared_prefix_requests,
                                          cfg.vocab_size, args.seed)
@@ -426,6 +500,31 @@ def main(argv=None):
                   f"{t['ttft_p95_ms']:.1f}ms, "
                   f"itl p50/p95 {t['itl_p50_ms']:.1f}/"
                   f"{t['itl_p95_ms']:.1f}ms")
+
+    # ---- pipelined churn: full lifecycle churn compiles nothing -----------
+    # the hardest compile-flatness test: cancels, preemptions, resumes and
+    # every batch size the tight pool forces, all through the pipelined
+    # path — the jit counters must not move from their post-warmup values
+    churn_trace = None
+    if args.trace_out:
+        root, ext = os.path.splitext(args.trace_out)
+        churn_trace = root + ".churn.pipeline" + (ext or ".json")
+    pipe_churn = run_churn(params, cfg, churn_work, backend=backend0,
+                           scheduler="priority", block_size=args.block_size,
+                           max_batch=args.max_batch, max_seq_len=churn_seq,
+                           num_blocks=tight, prefill_chunk=args.prefill_chunk,
+                           mesh=mesh, pipeline=True, warmup=True,
+                           telemetry=True, trace_out=churn_trace)
+    churn_compile_delta = {
+        k: pipe_churn["jit_compiles_total"][k] -
+        pipe_churn["jit_compiles_after_warmup"][k]
+        for k in pipe_churn["jit_compiles_total"]}
+    assert all(v == 0 for v in churn_compile_delta.values()), (
+        f"pipelined churn JIT-compiled after warmup: {churn_compile_delta}")
+    print(f"# pipelined churn: {pipe_churn['cancelled']} cancelled, "
+          f"{pipe_churn['preempted']} preempted over "
+          f"{pipe_churn['steps']} steps; jit counters flat after warmup "
+          f"({pipe_churn['warmup_shapes']} shapes)")
 
     # ---- scheduler identity: FCFS == priority when nothing contends -------
     # same arrivals, no cancellations, ample pool/batch: policy must be
@@ -500,6 +599,27 @@ def main(argv=None):
                 "summary": tm,
             },
             "results": [trim(r) for r in results],
+            "pipeline": {
+                "backend": backend0,
+                "outputs_identical": True,
+                "warmup_shapes": pipe_run["warmup_shapes"],
+                "warmup_seconds": pipe_run["warmup_seconds"],
+                "steady_compiles": steady_compiles,
+                "step_wall_ms_mean_sync": base["step_wall_ms_mean"],
+                "step_wall_ms_mean_pipeline": pipe_run["step_wall_ms_mean"],
+                "step_sync_ms_mean_sync": base["step_sync_ms_mean"],
+                "step_sync_ms_mean_pipeline": pipe_run["step_sync_ms_mean"],
+                "sync_ms_drop_frac": sync_drop,
+                "overlap_ms_mean": pipe_run["step_overlap_ms_mean"],
+                "churn": {
+                    "steps": pipe_churn["steps"],
+                    "requests": pipe_churn["requests"],
+                    "cancelled": pipe_churn["cancelled"],
+                    "preempted": pipe_churn["preempted"],
+                    "warmup_shapes": pipe_churn["warmup_shapes"],
+                    "compiles_after_warmup_delta": churn_compile_delta,
+                },
+            },
             "churn": {k: v for k, v in churn.items() if k != "outputs"},
             "scheduler_identity": {
                 "workload": "churn arrivals, no cancellations, ample pool",

@@ -48,6 +48,11 @@ _SMOKE: Dict[str, List[Tuple[str, str, float]]] = {
         ("churn.cancelled", "equal", 0),
         ("churn.preempted", "equal", 0),
         ("churn.steps", "equal", 0),
+        ("pipeline.outputs_identical", "equal", 0),
+        ("pipeline.steady_compiles", "equal", 0),
+        ("pipeline.churn.steps", "equal", 0),
+        ("pipeline.churn.cancelled", "equal", 0),
+        ("pipeline.churn.preempted", "equal", 0),
     ],
     "spec_decode": [
         ("schema_version", "equal", 0),

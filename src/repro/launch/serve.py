@@ -128,6 +128,25 @@ def main(argv=None):
     ap.add_argument("--no-metrics", dest="metrics", action="store_false",
                     help="disable telemetry even with --http "
                          "(GET /metrics then returns 503)")
+    ap.add_argument("--pipeline", dest="pipeline", action="store_true",
+                    default=None,
+                    help="overlapped plan/launch/collect step pipeline: "
+                         "host scheduling for step N+1 runs while the "
+                         "device executes step N (token-identical to the "
+                         "synchronous path); default: on with --http, off "
+                         "for the batch demo")
+    ap.add_argument("--no-pipeline", dest="pipeline", action="store_false",
+                    help="force the synchronous reference step path")
+    ap.add_argument("--warmup", dest="warmup", action="store_true",
+                    default=None,
+                    help="precompile the full power-of-two bucket grid at "
+                         "startup so steady-state serving never JIT-"
+                         "compiles; with --http, /healthz answers 503 until "
+                         "warmup finishes; default: on with --http, off for "
+                         "the batch demo")
+    ap.add_argument("--no-warmup", dest="warmup", action="store_false",
+                    help="skip startup precompilation (shapes compile "
+                         "lazily on first use)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome-trace JSON of the run (engine step "
                          "phases + one track per request; open in "
@@ -206,20 +225,33 @@ def main(argv=None):
         use_telemetry = True
     telemetry = Telemetry(trace=bool(args.trace_out) or args.http) \
         if use_telemetry else None
+    # pipeline/warmup default on for long-lived HTTP serving (throughput +
+    # no cold-start compiles behind /healthz), off for the one-shot demo
+    use_pipeline = args.http if args.pipeline is None else args.pipeline
+    use_warmup = args.http if args.warmup is None else args.warmup
     engine = ServingEngine(
         params, cfg, backend=args.ffn_impl, block_size=args.block_size,
         max_batch=args.max_batch or args.batch,
         max_seq_len=args.prompt_len + args.gen, seed=args.seed, spec=spec,
         prefix_cache=not args.no_prefix_cache,
         prefill_chunk=args.prefill_chunk, scheduler=args.scheduler,
-        telemetry=telemetry, mesh=mesh)
+        telemetry=telemetry, mesh=mesh, pipeline=use_pipeline)
 
     if args.http:
         import signal
 
         from repro.serving.server import ServingServer
-        server = ServingServer(engine, host=args.host, port=args.port)
+        server = ServingServer(engine, host=args.host, port=args.port,
+                               warmup=use_warmup)
         server.start()
+        if use_warmup:
+            server.wait_ready()
+            for row in engine.warmup_report:
+                print(f"[serve/warmup] {row['entry']:<8} {row['shape']} "
+                      f"compiled in {row['seconds']:.2f}s", flush=True)
+            print(f"[serve/warmup] {len(engine.warmup_report)} shapes in "
+                  f"{engine.warmup_seconds:.2f}s; steady-state serving "
+                  f"JIT-compiles nothing", flush=True)
         stop = {"flag": False}
 
         def _sig(signum, frame):
@@ -248,6 +280,10 @@ def main(argv=None):
     # master key (identical prompts must not produce identical samples)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p)
+    if use_warmup:
+        engine.warmup()
+        print(f"[serve/warmup] {len(engine.warmup_report)} shapes "
+              f"precompiled in {engine.warmup_seconds:.2f}s")
     t0 = time.time()
     with jax_profiler(args.jax_profile):
         outs = engine.generate([np.asarray(prompt[i]).tolist()

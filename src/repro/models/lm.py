@@ -515,6 +515,14 @@ def _paged_scan(params, x, pools, cfg, positions, block_tables, seq_lens,
     return logits, pools_out
 
 
+# Donation contract for the paged entrypoints below: the serving engine
+# jits them with the ``pools`` argument donated, so the input pool buffers
+# are CONSUMED by the call — after dispatch the only valid handle is the
+# returned ``pools``, which callers must rebind (``PagedKVCache.swap_pools``)
+# before the next dispatch. Both logits and pools come back as unresolved
+# device values; nothing here blocks, which is what lets the pipelined
+# engine run host planning while the device step executes.
+
 def paged_prefill(params: Dict, pools: Dict, block_tables: jax.Array,
                   tokens: jax.Array, num_new: jax.Array,
                   cfg: ModelConfig, start_lens: Optional[jax.Array] = None,

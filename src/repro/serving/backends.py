@@ -7,6 +7,12 @@ fused up/down projection, Algorithms 1-2 / Eq. 3). A ``ServingBackend``
 implementation per step kind, so dense-vs-sparse serving is
 ``ServingEngine(..., backend="gather")`` vs ``backend="dense"`` — nothing
 else in the engine changes.
+
+Every backend's jitted entrypoint follows the engine's donation contract:
+KV pools go in donated and come back as fresh (unresolved) device buffers,
+so a backend implementation must never stash or reuse a pool handle it was
+called with — only the returned pools are alive (see
+``repro.models.lm.paged_prefill`` and ``PagedKVCache.swap_pools``).
 """
 from __future__ import annotations
 

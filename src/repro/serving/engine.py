@@ -94,17 +94,22 @@ from repro.serving import sampling as sampling_mod
 from repro.serving.backends import (DECODE, PREFILL, get_backend,
                                     make_draft_pair)
 from repro.serving.kv_cache import PagedKVCache
+from repro.serving.pipeline import (DecodeLaunch, InFlightStep, PrefillLaunch,
+                                    SpecLaunch, bucket, bucket_grid,
+                                    start_host_copy)
 from repro.serving.request import (CANCELLED, EVENT_CANCEL, EVENT_FINISH,
                                    EVENT_PREEMPT, EVENT_TOKEN,
                                    FINISH_CANCELLED, FINISHED, PREEMPTED,
                                    PREFILLING, RUNNING, Request,
                                    RequestHandle, RequestOutput, StepEvent)
 from repro.serving.sampling import SamplingParams
-from repro.serving.scheduler import Scheduler, get_scheduler
+from repro.serving.scheduler import Scheduler, get_scheduler, plan_victims
 from repro.serving.spec import (Drafter, SpecConfig, Verifier,
                                 rollback_after_verify)
 from repro.serving.telemetry import (PHASE_ADMISSION, PHASE_CANCEL,
-                                     PHASE_DECODE, PHASE_DRAFT,
+                                     PHASE_COLLECT, PHASE_DECODE,
+                                     PHASE_DRAFT, PHASE_LAUNCH,
+                                     PHASE_OVERLAP, PHASE_PLAN,
                                      PHASE_PREFILL, PHASE_SAMPLE,
                                      PHASE_VERIFY, Telemetry)
 
@@ -133,17 +138,22 @@ class StepStats:
     spec_drafted: int = 0    # draft tokens proposed this step
     spec_accepted: int = 0   # ... of which the verifier accepted
     wall_ms: float = 0.0     # host wall-clock for the whole step
-    sync_ms: float = 0.0     # ... of which spent blocked on device results
-    #                          (dispatch+compute sync; wall - sync = host-side
-    #                          scheduling, so TP speedups are attributable)
+    sync_ms: float = 0.0     # ... of which spent blocked on device results.
+    #                          Synchronous mode: dispatch+compute sync (wall -
+    #                          sync = host-side scheduling, so TP speedups are
+    #                          attributable). Pipelined mode: RESIDUAL
+    #                          blocking only — the tail of the previous
+    #                          step's async sampled-token transfer that this
+    #                          step's plan work did not hide.
+    overlap_ms: float = 0.0  # pipelined mode only: wall time the previously
+    #                          launched device step ran concurrently with
+    #                          host-side work (its launch -> collect span);
+    #                          0.0 in synchronous mode / nothing in flight
 
 
-def _bucket(n: int, lo: int, hi: int) -> int:
-    """Smallest power-of-two >= n, clamped to [lo, hi]."""
-    b = lo
-    while b < n:
-        b *= 2
-    return min(b, hi)
+# canonical power-of-two bucketing lives in pipeline.py (warmup walks the
+# same grid the steps request); the old private name stays importable
+_bucket = bucket
 
 
 class ServingEngine:
@@ -158,7 +168,8 @@ class ServingEngine:
                  prefix_cache: bool = True, prefill_chunk: int = 64,
                  scheduler: Union[str, Scheduler] = "fcfs",
                  max_stats: Optional[int] = 4096, mesh=None,
-                 telemetry: Union[bool, Telemetry, None] = False):
+                 telemetry: Union[bool, Telemetry, None] = False,
+                 pipeline: bool = False, warmup: bool = False):
         self.backend = get_backend(backend)
         self.cfg = cfg
         self.cfg_prefill = self.backend.configure(cfg, PREFILL)
@@ -257,6 +268,18 @@ class ServingEngine:
         self._handles: Dict[int, RequestHandle] = {}
         self._decode_fns: Dict[int, callable] = {}
         self._prefill_fns: Dict[int, callable] = {}
+        # pipelined step loop (plan/launch/collect; see pipeline.py):
+        # pipeline=False keeps the original synchronous step as the
+        # numerics/latency reference — token streams are identical either way
+        self.pipeline = bool(pipeline)
+        self._inflight: Optional[InFlightStep] = None
+        self._preempt_pending: List[Request] = []  # victims planned while a
+        #                                            step was in flight; they
+        #                                            preempt at collect
+        self.warmup_seconds = 0.0
+        self.warmup_report: List[Dict] = []        # per-shape compile timings
+        if warmup:
+            self.warmup()
 
     @property
     def waiting(self) -> List[Request]:
@@ -368,7 +391,8 @@ class ServingEngine:
         return True
 
     def has_unfinished(self) -> bool:
-        return bool(len(self.scheduler) or self.prefilling or self.running)
+        return bool(len(self.scheduler) or self.prefilling or self.running
+                    or self._inflight is not None)
 
     def step(self) -> List[StepEvent]:
         """One engine iteration: process pending cancellations, advance the
@@ -377,11 +401,23 @@ class ServingEngine:
         scheduler policy (prefix-cache-aware, possibly preempting), then
         advance every in-flight prefill by one chunk through a single
         batched call. Returns this iteration's StepEvents in commit order;
-        they are also dispatched to each request's handle."""
-        with self._lock:
-            return self._step_locked()
+        they are also dispatched to each request's handle.
 
-    def _step_locked(self) -> List[StepEvent]:
+        With ``pipeline=True`` the same work is re-ordered into
+        plan -> collect -> launch: host planning runs while the previously
+        launched device step is still executing, its tokens commit at
+        collect, and this step's device work is dispatched without blocking
+        (resolved by the NEXT step, or by ``flush()``). Per-request token
+        streams are identical in both modes."""
+        with self._lock:
+            if self.pipeline:
+                return self._step_pipelined()
+            return self._step_sync()
+
+    def _step_sync(self) -> List[StepEvent]:
+        """The original fully synchronous step: each phase launches AND
+        collects before the next phase plans (the numerics/latency
+        reference for the pipelined loop)."""
         tm = self.telemetry
         t_step = time.perf_counter()
         self._sync_s = 0.0
@@ -397,15 +433,17 @@ class ServingEngine:
             normal_rows = [r for r in self.running if not self._can_spec(r)]
             if normal_rows:
                 t0 = time.perf_counter()
-                decode_batch, padded, evs = self._decode(normal_rows)
-                events.extend(evs)
+                dl = self._launch_decode(normal_rows)
+                decode_batch, padded = dl.batch, dl.padded
+                events.extend(self._collect_decode(dl))
                 if tm is not None:
                     tm.phase(PHASE_DECODE, t0, time.perf_counter(),
                              self._step_idx)
             if spec_rows:
                 # draft / verify / sample sub-phases are timed inside
+                sl = self._launch_spec(spec_rows, timed=True)
                 spec_batch, drafted, accepted, evs = \
-                    self._spec_decode(spec_rows)
+                    self._collect_spec(sl, timed=True)
                 events.extend(evs)
         t0 = time.perf_counter()
         admitted, cached_toks, evs = self._admit()
@@ -414,11 +452,110 @@ class ServingEngine:
             tm.phase(PHASE_ADMISSION, t0, time.perf_counter(),
                      self._step_idx)
         t0 = time.perf_counter()
-        pf_tokens, evs = self._prefill_step()
+        pf_tokens = 0
+        pl = self._launch_prefill()
+        if pl is not None:
+            pf_tokens = sum(pl.chunk_lens)
+            events.extend(self._collect_prefill(pl))
+            if tm is not None and pf_tokens:
+                tm.phase(PHASE_PREFILL, t0, time.perf_counter(),
+                         self._step_idx)
+        return self._finalize_step(
+            events, t_step=t_step, decode_batch=decode_batch, padded=padded,
+            admitted=admitted, cached_toks=cached_toks, pf_tokens=pf_tokens,
+            spec_batch=spec_batch, drafted=drafted, accepted=accepted)
+
+    def _step_pipelined(self) -> List[StepEvent]:
+        """plan(N+1) concurrent with device(N): host planning first, then
+        resolve the previously launched step, then dispatch new device work
+        without blocking on it.
+
+        The external contract (per-request event/token streams) matches the
+        synchronous path. StepStats attribution shifts by construction:
+        decode/prefill columns describe THIS call's launch, the spec
+        columns describe the collected (previous) launch, and terminal /
+        preempt counts describe events committed by this call.
+
+        Safety invariant: while a launched step is in flight, every
+        prefilling/running row is part of it, and plan-phase work only
+        claims free or refcount-zero blocks — so cancels and preemptions of
+        launched rows are DEFERRED and settle at collect, right after their
+        in-flight tokens commit, and nothing the device is reading or
+        writing is ever freed, COW-copied, or reallocated under it."""
+        tm = self.telemetry
+        t_step = time.perf_counter()
+        self._sync_s = 0.0
+        events: List[StepEvent] = []
+        inflight = self._inflight
+        # ---- plan: pure host work against committed state
+        events += self._process_cancels(defer_inflight=inflight is not None)
+        t0 = time.perf_counter()
+        if tm is not None:
+            tm.phase(PHASE_CANCEL, t_step, t0, self._step_idx)
+        admitted, cached_toks, evs = self._admit(
+            defer_preempt=inflight is not None)
         events.extend(evs)
-        if tm is not None and pf_tokens:
-            tm.phase(PHASE_PREFILL, t0, time.perf_counter(),
+        t_plan_end = time.perf_counter()
+        if tm is not None:
+            tm.phase(PHASE_ADMISSION, t0, t_plan_end, self._step_idx)
+            tm.phase(PHASE_PLAN, t_step, t_plan_end, self._step_idx)
+        # ---- collect: resolve the previous launch, commit its tokens
+        overlap_ms = 0.0
+        spec_batch = drafted = accepted = 0
+        if inflight is not None:
+            self._inflight = None
+            t_collect0 = time.perf_counter()
+            overlap_ms = (t_collect0 - inflight.t_launched) * 1e3
+            if tm is not None:
+                tm.phase(PHASE_OVERLAP, inflight.t_launched, t_collect0,
+                         self._step_idx)
+            if inflight.decode is not None:
+                events.extend(self._collect_decode(inflight.decode))
+            if inflight.spec is not None:
+                spec_batch, drafted, accepted, evs = self._collect_spec(
+                    inflight.spec, timed=False)
+                events.extend(evs)
+            if inflight.prefill is not None:
+                events.extend(self._collect_prefill(inflight.prefill))
+            events.extend(self._flush_pending_preempts())
+            if tm is not None:
+                tm.phase(PHASE_COLLECT, t_collect0, time.perf_counter(),
+                         self._step_idx)
+        # ---- launch: dispatch on post-collect state; nothing blocks
+        t_launch0 = time.perf_counter()
+        decode_batch = padded = pf_tokens = 0
+        dl = sl = None
+        if self.running:
+            spec_rows = [r for r in self.running if self._can_spec(r)]
+            normal_rows = [r for r in self.running if not self._can_spec(r)]
+            if normal_rows:
+                dl = self._launch_decode(normal_rows)
+                decode_batch, padded = dl.batch, dl.padded
+            if spec_rows:
+                sl = self._launch_spec(spec_rows, timed=False)
+        pl = self._launch_prefill()
+        if pl is not None:
+            pf_tokens = sum(pl.chunk_lens)
+        if dl is not None or sl is not None or pl is not None:
+            self._inflight = InFlightStep(decode=dl, spec=sl, prefill=pl,
+                                          t_launched=time.perf_counter())
+        if tm is not None:
+            tm.phase(PHASE_LAUNCH, t_launch0, time.perf_counter(),
                      self._step_idx)
+        return self._finalize_step(
+            events, t_step=t_step, decode_batch=decode_batch, padded=padded,
+            admitted=admitted, cached_toks=cached_toks, pf_tokens=pf_tokens,
+            spec_batch=spec_batch, drafted=drafted, accepted=accepted,
+            overlap_ms=overlap_ms)
+
+    def _finalize_step(self, events: List[StepEvent], *, t_step: float,
+                       decode_batch: int, padded: int, admitted: int,
+                       cached_toks: int, pf_tokens: int, spec_batch: int,
+                       drafted: int, accepted: int,
+                       overlap_ms: float = 0.0) -> List[StepEvent]:
+        """Shared step epilogue: StepStats, telemetry rollup, handle
+        dispatch. Identical between the synchronous and pipelined loops."""
+        tm = self.telemetry
         self._step_idx += 1
         n_fin = sum(1 for e in events if e.kind == EVENT_FINISH)
         n_cancel = sum(1 for e in events if e.kind == EVENT_CANCEL)
@@ -437,20 +574,50 @@ class ServingEngine:
             spec_batch=spec_batch,
             spec_drafted=drafted, spec_accepted=accepted,
             wall_ms=(time.perf_counter() - t_step) * 1e3,
-            sync_ms=self._sync_s * 1e3))
+            sync_ms=self._sync_s * 1e3,
+            overlap_ms=overlap_ms))
         if self.max_stats is not None and len(self.stats) >= 2 * self.max_stats:
             del self.stats[:-self.max_stats]     # amortized O(1) trim
         if tm is not None:
             tm.on_step(kv=self.kv, reserved=self._reserved,
                        wall_s=time.perf_counter() - t_step,
                        sync_s=self._sync_s)
+        self._dispatch_events(events)
+        return events
+
+    def _dispatch_events(self, events: List[StepEvent]) -> None:
         for ev in events:
             h = self._handles.get(ev.rid)
             if h is not None:
                 h._on_event(ev)
                 if ev.terminal:
                     self._handles.pop(ev.rid, None)
-        return events
+
+    def flush(self) -> List[StepEvent]:
+        """Drain the pipelined tail: resolve the in-flight launched step (if
+        any) WITHOUT launching new work, commit its tokens, dispatch its
+        events to the handles, and return them. A no-op (empty list) in
+        synchronous mode or when nothing is in flight. ``generate()`` and
+        the engine loop drain via ``has_unfinished()`` + ``step()``, which
+        subsumes this; the HTTP server calls it on shutdown so a launched
+        step never leaks past the process's clean exit."""
+        with self._lock:
+            inflight = self._inflight
+            if inflight is None:
+                return []
+            self._inflight = None
+            self._sync_s = 0.0
+            events: List[StepEvent] = []
+            if inflight.decode is not None:
+                events.extend(self._collect_decode(inflight.decode))
+            if inflight.spec is not None:
+                _, _, _, evs = self._collect_spec(inflight.spec, timed=False)
+                events.extend(evs)
+            if inflight.prefill is not None:
+                events.extend(self._collect_prefill(inflight.prefill))
+            events.extend(self._flush_pending_preempts())
+            self._dispatch_events(events)
+            return events
 
     def generate(self, prompts: Sequence[Sequence[int]], *,
                  sampling: Optional[SamplingParams] = None,
@@ -566,17 +733,49 @@ class ServingEngine:
         return StepEvent(kind=kind, rid=req.rid, step=self._step_idx,
                          output=out)
 
-    def _process_cancels(self) -> List[StepEvent]:
+    def _process_cancels(self, defer_inflight: bool = False) \
+            -> List[StepEvent]:
         """Abort every request flagged since the last step, wherever it is:
         queued (no KV to release), or admitted (prefilling/running/spec —
-        blocks freed or parked, reservation returned)."""
+        blocks freed or parked, reservation returned).
+
+        defer_inflight: plan-phase mode with a launched step still
+        executing. Queued cancels process immediately (no KV, not part of
+        any launch); prefilling/running rows are ALL part of the in-flight
+        step — freeing their blocks now would mutate tables the device is
+        still reading/writing — so their flag stays set and collect
+        resolves it right after their launched tokens commit."""
         events: List[StepEvent] = []
         for req in [r for r in self.scheduler if r.cancel_requested]:
             self.scheduler.remove(req.rid)
             events.append(self._terminal_event(req, FINISH_CANCELLED))
+        if defer_inflight:
+            return events
         for req in [r for r in self.prefilling + self.running
                     if r.cancel_requested]:
             events.append(self._terminal_event(req, FINISH_CANCELLED))
+        return events
+
+    def _deferred_cancel(self, req: Request) -> Optional[StepEvent]:
+        """Pipelined collect: resolve a cancel flagged while this row's
+        step was in flight (its just-launched token has already committed —
+        cancellation never shortens the stream vs the synchronous path).
+        Always None in synchronous mode, whose cancel timing — flags
+        processed at the NEXT step's cancel phase — must stay untouched."""
+        if self.pipeline and req.cancel_requested:
+            return self._terminal_event(req, FINISH_CANCELLED)
+        return None
+
+    def _flush_pending_preempts(self) -> List[StepEvent]:
+        """Apply preemptions planned while a step was in flight. Runs at
+        collect, after the victims' launched tokens committed; a victim
+        that reached a terminal state in the meantime (finished naturally,
+        or cancelled) has nothing left to preempt."""
+        events: List[StepEvent] = []
+        pending, self._preempt_pending = self._preempt_pending, []
+        for req in pending:
+            if not req.done and any(r.rid == req.rid for r in self.running):
+                events.append(self._preempt(req))
         return events
 
     def _preempt(self, req: Request) -> StepEvent:
@@ -618,7 +817,10 @@ class ServingEngine:
             ffn_present=np.asarray(ffn_aux["ffn_present"], np.float64),
             impl=cfg_phase.sparsity.ffn_impl)
 
-    def _decode(self, batch: List[Request]):
+    def _launch_decode(self, batch: List[Request]) -> DecodeLaunch:
+        """Dispatch one batched decode call; no blocking readback. The
+        device->host copy of the sampled row starts immediately so collect
+        pays only the residual transfer tail."""
         b = len(batch)
         padded = _bucket(b, 1, self.max_batch)
         # The last sampled token is not in the cache yet: it is this step's
@@ -657,17 +859,26 @@ class ServingEngine:
                 jnp.asarray(toks), keys, jnp.asarray(temps),
                 jnp.asarray(topks), jnp.asarray(topps))
             if self._probe:
-                next_toks, logits, ffn_aux, self.kv.pools = out
+                next_toks, logits, ffn_aux, pools = out
             else:
-                (next_toks, logits, self.kv.pools), ffn_aux = out, None
-        self._sync(next_toks)
-        next_toks = np.asarray(next_toks)
-        self._publish_ffn(ffn_aux, b, self.cfg_decode)
+                (next_toks, logits, pools), ffn_aux = out, None
+            self.kv.swap_pools(pools)
+        start_host_copy(next_toks)
+        return DecodeLaunch(rows=list(batch), batch=b, padded=padded,
+                            next_toks=next_toks, logits=logits,
+                            ffn_aux=ffn_aux)
+
+    def _collect_decode(self, dl: DecodeLaunch) -> List[StepEvent]:
+        """Resolve a launched decode: block on the sampled row (counted as
+        sync), then commit one token per row and settle deferred cancels."""
+        self._sync(dl.next_toks)
+        next_toks = np.asarray(dl.next_toks)
+        self._publish_ffn(dl.ffn_aux, dl.batch, self.cfg_decode)
         events: List[StepEvent] = []
         now = time.perf_counter()
-        for i, r in enumerate(batch):
+        for i, r in enumerate(dl.rows):
             if r.logits_trace is not None:
-                r.logits_trace.append(np.asarray(logits[i], np.float32))
+                r.logits_trace.append(np.asarray(dl.logits[i], np.float32))
             reason = r.append(next_toks[i])
             if self.telemetry is not None:
                 self.telemetry.on_tokens(r, 1, now)
@@ -676,17 +887,23 @@ class ServingEngine:
                                     tokens=(int(next_toks[i]),)))
             if reason:
                 events.append(self._terminal_event(r, reason))
-        return b, padded, events
+            else:
+                cancel_ev = self._deferred_cancel(r)
+                if cancel_ev is not None:
+                    events.append(cancel_ev)
+        return events
 
-    def _spec_decode(self, rows: List[Request]):
-        """Draft -> verify -> accept -> rollback for the speculating rows.
+    def _launch_spec(self, rows: List[Request], *, timed: bool) -> SpecLaunch:
+        """Dispatch draft -> verify for the speculating rows.
 
         Per step each row proposes ``k_eff = min(k, remaining - 1)`` tokens
         through the draft backend, then ONE batched trusted-backend pass
-        scores all of them; the accepted prefix plus the verifier's
-        correction/bonus token commits (>= 1 token per step guaranteed), and
-        the block-table tail covering rejected scratch positions rolls back
-        to the pool."""
+        scores all of them. The verify token block is concatenated ON
+        DEVICE from the draft output, so both calls go out back-to-back
+        with no host readback between them — in pipelined mode
+        (``timed=False``) nothing here blocks at all; the synchronous path
+        (``timed=True``) keeps its draft/verify phase timing by syncing the
+        draft output before dispatching verify."""
         b = len(rows)
         k = self.spec.k
         padded = _bucket(b, 1, self.max_batch)
@@ -729,34 +946,58 @@ class ServingEngine:
         tm = self.telemetry
         t0 = time.perf_counter()
         with self._mesh_ctx():
-            d_toks, d_logits, self.kv.pools = self.drafter.draft(
+            d_toks, d_logits, pools = self.drafter.draft(
                 self.params, self.kv.pools, jnp.asarray(bt),
                 jnp.asarray(sl0), jnp.asarray(tok0), jnp.asarray(dlen), keys,
                 jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps),
                 greedy=all_greedy)
-        self._sync(d_toks)
-        if tm is not None:
-            tm.phase(PHASE_DRAFT, t0, time.perf_counter(), self._step_idx)
-        d_toks = np.asarray(d_toks)
-        verify_toks = np.zeros((padded, k + 1), np.int32)
-        verify_toks[:, 0] = tok0[:, 0]
-        verify_toks[:, 1:] = d_toks
+            self.kv.swap_pools(pools)
+        if timed:
+            self._sync(d_toks)
+            if tm is not None:
+                tm.phase(PHASE_DRAFT, t0, time.perf_counter(),
+                         self._step_idx)
         num_new = dlen + (dlen > 0)            # k_eff + 1; 0 for padded rows
-        t0 = time.perf_counter()
+        t_verify0 = time.perf_counter()
         with self._mesh_ctx():
-            t_logits, self.kv.pools = self.verifier.verify(
+            tok0_dev = jnp.asarray(tok0)
+            if self.mesh is not None:
+                # commit the host column to the replicated layout d_toks
+                # already has, so the eager concat never guesses a sharding
+                tok0_dev = jax.device_put(
+                    tok0_dev, sharding.replicated(self.mesh))
+            verify_toks = jnp.concatenate([tok0_dev, d_toks], axis=1)
+            t_logits, pools = self.verifier.verify(
                 self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl0),
-                jnp.asarray(num_new), jnp.asarray(verify_toks))
-        self._sync(t_logits)
-        if tm is not None:
-            tm.phase(PHASE_VERIFY, t0, time.perf_counter(), self._step_idx)
-        t_logits = np.asarray(t_logits)
-        d_logits_np = None if all_greedy else np.asarray(d_logits)
+                jnp.asarray(num_new), verify_toks)
+            self.kv.swap_pools(pools)
+        start_host_copy(d_toks)
+        start_host_copy(t_logits)
+        if not all_greedy:
+            start_host_copy(d_logits)
+        return SpecLaunch(rows=list(rows), batch=b, padded=padded,
+                          k_effs=k_effs, all_greedy=all_greedy,
+                          d_toks=d_toks, d_logits=d_logits,
+                          t_logits=t_logits, t_verify0=t_verify0)
+
+    def _collect_spec(self, sl: SpecLaunch, *, timed: bool):
+        """Resolve a launched draft+verify pair: accept on the host, commit
+        the accepted prefix + correction/bonus token per row (>= 1 token
+        guaranteed), roll the block-table tail covering rejected scratch
+        positions back to the pool, and settle deferred cancels."""
+        tm = self.telemetry
+        self._sync(sl.d_toks, sl.t_logits)
+        if timed and tm is not None:
+            tm.phase(PHASE_VERIFY, sl.t_verify0, time.perf_counter(),
+                     self._step_idx)
+        d_toks = np.asarray(sl.d_toks)
+        t_logits = np.asarray(sl.t_logits)
+        d_logits_np = None if sl.all_greedy else np.asarray(sl.d_logits)
         events: List[StepEvent] = []
         drafted_total = accepted_total = 0
         t_sample = time.perf_counter()
-        for i, r in enumerate(rows):
-            k_eff = k_effs[i]
+        for i, r in enumerate(sl.rows):
+            k_eff = sl.k_effs[i]
             emitted, n_acc = self.verifier.accept(
                 r, k_eff, d_toks[i, :k_eff],
                 None if d_logits_np is None else d_logits_np[i, :k_eff],
@@ -783,6 +1024,11 @@ class ServingEngine:
             if reason:
                 events.append(self._terminal_event(r, reason))
             else:
+                cancel_ev = self._deferred_cancel(r)
+                if cancel_ev is not None:
+                    # _finish freed the whole table, scratch tail included
+                    events.append(cancel_ev)
+                    continue
                 # rollback: blocks past the committed length (seq_len - 1
                 # cached slots) return to the pool and the reservation
                 freed = rollback_after_verify(self.kv, r.rid, r.seq_len - 1)
@@ -792,20 +1038,32 @@ class ServingEngine:
             # host-side acceptance / rejection-sampling over the whole batch
             tm.phase(PHASE_SAMPLE, t_sample, time.perf_counter(),
                      self._step_idx)
-        return b, drafted_total, accepted_total, events
+        return sl.batch, drafted_total, accepted_total, events
 
-    def _admit(self):
+    def _admit(self, defer_preempt: bool = False):
         """Admit queued requests under the scheduler policy while a batch
         slot and (prefix-cache-aware) worst-case block capacity exist.
         Matched prefix blocks are shared instead of recomputed: only the
         suffix is allocated fresh and only suffix tokens will be prefilled.
         When the candidate does NOT fit, the scheduler may name a running
         victim to preempt — freeing its blocks (and slot) for the candidate
-        and re-queueing it to resume later."""
+        and re-queueing it to resume later.
+
+        defer_preempt: plan-phase mode with a launched step in flight.
+        Victims must keep running until their launched tokens commit, so
+        the planned set is parked in ``_preempt_pending`` (applied at
+        collect) and the candidate re-tries on a later plan against the
+        freed capacity. Block allocation itself is safe while in flight:
+        ``plan_allocation``/``commit_allocation`` only claim free-list or
+        refcount-zero LRU blocks, which no launched table references."""
         admitted = 0
         cached_tokens = 0
         events: List[StepEvent] = []
         while True:
+            if self._preempt_pending:
+                # a victim set is already planned but its blocks free only
+                # at collect; admission state is stale until then
+                break
             req = self.scheduler.peek()
             if req is None:
                 break
@@ -830,43 +1088,27 @@ class ServingEngine:
             if not have_slot or avail - self._reserved < need:
                 # plan the full victim set BEFORE evicting anyone: if even
                 # preempting every victim the policy would offer cannot fit
-                # the candidate, defer without wasting their KV/progress.
-                # A victim's table block only becomes available if no OTHER
-                # live request still references it (shared prefix blocks
-                # decref, they don't free), so simulate the refcounts of the
-                # whole plan; reservations always return in full.
-                plan: List[Request] = []
-                sim_running = list(self.running)
-                sim_dec: Dict[int, int] = {}
-                freeable = 0
-                feasible = False
-                while True:
-                    victim = self.scheduler.pick_victim(req, sim_running)
-                    if victim is None:
-                        break
-                    sim_running.remove(victim)
-                    plan.append(victim)
-                    for blk in self.kv.block_table(victim.rid):
-                        sim_dec[blk] = sim_dec.get(blk, 0) + 1
-                        if self.kv.ref_count(blk) == sim_dec[blk]:
-                            freeable += 1        # last reference: frees/parks
-                    freeable += victim.reserved_blocks
-                    slot_ok = len(sim_running) + len(self.prefilling) \
-                        < self.max_batch
-                    if slot_ok and \
-                            avail + freeable - self._reserved >= need:
-                        feasible = True
-                        break
-                if not feasible:
+                # the candidate, defer without wasting their KV/progress
+                # (plan_victims simulates the whole plan's refcounts and
+                # mutates nothing)
+                plan = plan_victims(
+                    self.scheduler, req, self.running, self.kv,
+                    reserved=self._reserved, avail=avail, need=need,
+                    other_slots=len(self.prefilling),
+                    max_batch=self.max_batch)
+                if plan is None:
                     break              # defer: preemption cannot help
+                if defer_preempt:
+                    self._preempt_pending.extend(plan)
+                    break              # victims free at collect; re-plan then
                 for victim in plan:
                     events.append(self._preempt(victim))
                 continue               # capacity changed: re-plan admission
             self.scheduler.take(req)
             target_blocks = self.kv.blocks_for(tlen)
             if self.prefix_cache:
-                hit = self.kv.allocate_prefix(req.rid, target, target_blocks,
-                                              matched=matched)
+                hit = self.kv.commit_allocation(self.kv.plan_allocation(
+                    req.rid, target, target_blocks, matched=matched))
             else:
                 self.kv.allocate(req.rid, target_blocks)
                 hit = 0
@@ -889,7 +1131,7 @@ class ServingEngine:
             admitted += 1
         return admitted, cached_tokens, events
 
-    def _prefill_step(self):
+    def _launch_prefill(self) -> Optional[PrefillLaunch]:
         """Advance every in-flight prefill by one chunk in ONE batched call.
 
         Each row computes up to ``prefill_chunk`` tokens of its prefill
@@ -899,10 +1141,11 @@ class ServingEngine:
         RoPE offsets. Rows whose target completes sample their next token
         from the same call and join the decode batch; the rest resume next
         step, interleaved with decode (bounded TTFT impact on running
-        requests)."""
+        requests). Returns None when nothing is prefilling; otherwise the
+        launched (unresolved) call — ``_collect_prefill`` commits it."""
         rows = list(self.prefilling)
         if not rows:
-            return 0, []
+            return None
         b = len(rows)
         padded_b = _bucket(b, 1, self.max_batch)
         chunk_lens = [min(self.prefill_chunk,
@@ -960,21 +1203,36 @@ class ServingEngine:
                 keys, jnp.asarray(temps), jnp.asarray(topks),
                 jnp.asarray(topps))
             if self._probe:
-                tok, logits, ffn_aux, self.kv.pools = out
+                tok, logits, ffn_aux, pools = out
             else:
-                (tok, logits, self.kv.pools), ffn_aux = out, None
-        self._sync(tok)
-        tok = np.asarray(tok)
-        self._publish_ffn(ffn_aux, sum(chunk_lens), self.cfg_prefill)
+                (tok, logits, pools), ffn_aux = out, None
+            self.kv.swap_pools(pools)
+        start_host_copy(tok)
+        self.prefill_tokens_total += sum(chunk_lens)
+        return PrefillLaunch(rows=rows, chunk_lens=chunk_lens, tok=tok,
+                             logits=logits, ffn_aux=ffn_aux)
+
+    def _collect_prefill(self, pl: PrefillLaunch) -> List[StepEvent]:
+        """Resolve a launched prefill chunk: advance each row's position,
+        settle deferred cancels, and for rows whose target completed commit
+        the sampled token and move them to the decode batch (in pipelined
+        mode that is THIS step's launch — join-on-arrival keeps its one-step
+        cadence, just phase-shifted with everything else)."""
+        self._sync(pl.tok)
+        tok = np.asarray(pl.tok)
+        self._publish_ffn(pl.ffn_aux, sum(pl.chunk_lens), self.cfg_prefill)
         events: List[StepEvent] = []
-        for i, r in enumerate(rows):
-            r.prefill_pos += chunk_lens[i]
+        for i, r in enumerate(pl.rows):
+            r.prefill_pos += pl.chunk_lens[i]
             if r.prefill_pos < len(r.prefill_target):
+                cancel_ev = self._deferred_cancel(r)
+                if cancel_ev is not None:
+                    events.append(cancel_ev)
                 continue                              # more chunks to go
             if self.prefix_cache:
                 self.kv.register_prefix(r.rid, r.prompt)
             if r.logits_trace is not None:
-                r.logits_trace.append(np.asarray(logits[i], np.float32))
+                r.logits_trace.append(np.asarray(pl.logits[i], np.float32))
             self.prefilling = [x for x in self.prefilling if x.rid != r.rid]
             r.status = RUNNING
             self.running.append(r)
@@ -988,6 +1246,112 @@ class ServingEngine:
                                     tokens=(int(tok[i]),)))
             if reason:
                 events.append(self._terminal_event(r, reason))
-        computed = sum(chunk_lens)
-        self.prefill_tokens_total += computed
-        return computed, events
+            else:
+                cancel_ev = self._deferred_cancel(r)
+                if cancel_ev is not None:
+                    events.append(cancel_ev)
+        return events
+
+    # ---------------------------------------------------------------- warmup
+
+    def warmup(self) -> List[Dict]:
+        """Precompile the full bucketed shape grid so steady-state serving
+        never pays a JIT compile: every decode batch bucket, every
+        (batch, chunk) prefill bucket pair, and — with speculation on — the
+        draft/verify shapes for the configured k, each in both the
+        all-greedy and sampling variants. Dummy calls use all-null block
+        tables with zero valid lengths, exactly the shape/trace every
+        padded production row already exercises, so no allocator or request
+        state is touched and the writes all land in the discarded null
+        block. Records per-shape compile time in ``warmup_report``, the
+        total in ``warmup_seconds`` (and the ``serving_warmup_seconds``
+        gauge), and returns the report."""
+        with self._lock:
+            t_start = time.perf_counter()
+            report: List[Dict] = []
+            batches = bucket_grid(1, self.max_batch)
+            lo = min(self.min_prefill_bucket, self.prefill_chunk)
+            chunks = bucket_grid(lo, self.prefill_chunk)
+            width = self.table_width
+
+            def null_args(padded):
+                # (tables, lens, temps, topks, topps): null tables, zero
+                # valid lengths; temps=1/topp=1 keep the sampling variant's
+                # math well-defined even over the null block's garbage
+                return (np.zeros((padded, width), np.int32),
+                        np.zeros((padded,), np.int32),
+                        np.ones((padded,), np.float32),
+                        np.zeros((padded,), np.int32),
+                        np.ones((padded,), np.float32))
+
+            def timed(entry, shape, call):
+                t0 = time.perf_counter()
+                out = call()
+                jax.block_until_ready(out)
+                report.append({"entry": entry, "shape": shape,
+                               "seconds": time.perf_counter() - t0})
+                return out
+
+            with self._mesh_ctx():
+                for padded in batches:
+                    bt, sl, temps, topks, topps = null_args(padded)
+                    toks = np.zeros((padded, 1), np.int32)
+                    keys = jnp.zeros((padded, 2), jnp.uint32)
+                    for greedy in (True, False):
+                        fn = self._jit_decode(padded, greedy)
+                        out = timed(
+                            "decode", (padded, greedy), lambda: fn(
+                                self.params, self.kv.pools, jnp.asarray(bt),
+                                jnp.asarray(sl), jnp.asarray(toks), keys,
+                                jnp.asarray(temps), jnp.asarray(topks),
+                                jnp.asarray(topps)))
+                        self.kv.swap_pools(out[-1])
+                for padded in batches:
+                    for chunk in chunks:
+                        bt, start, temps, topks, topps = null_args(padded)
+                        ptoks = np.zeros((padded, chunk), np.int32)
+                        num_new = np.zeros((padded,), np.int32)
+                        keys = jnp.zeros((padded, 2), jnp.uint32)
+                        for greedy in (True, False):
+                            fn = self._jit_prefill(padded, chunk, greedy)
+                            out = timed(
+                                "prefill", (padded, chunk, greedy),
+                                lambda: fn(
+                                    self.params, self.kv.pools,
+                                    jnp.asarray(bt), jnp.asarray(ptoks),
+                                    jnp.asarray(start), jnp.asarray(num_new),
+                                    keys, jnp.asarray(temps),
+                                    jnp.asarray(topks), jnp.asarray(topps)))
+                            self.kv.swap_pools(out[-1])
+                if self.spec is not None:
+                    k = self.spec.k
+                    for padded in batches:
+                        bt, sl0, temps, topks, topps = null_args(padded)
+                        tok0 = np.zeros((padded, 1), np.int32)
+                        dlen = np.zeros((padded,), np.int32)
+                        dkeys = jnp.zeros((k, padded, 2), jnp.uint32)
+                        for greedy in (True, False):
+                            out = timed(
+                                "draft", (padded, greedy),
+                                lambda: self.drafter.draft(
+                                    self.params, self.kv.pools,
+                                    jnp.asarray(bt), jnp.asarray(sl0),
+                                    jnp.asarray(tok0), jnp.asarray(dlen),
+                                    dkeys, jnp.asarray(temps),
+                                    jnp.asarray(topks), jnp.asarray(topps),
+                                    greedy=greedy))
+                            self.kv.swap_pools(out[-1])
+                        vtoks = np.zeros((padded, k + 1), np.int32)
+                        num_new = np.zeros((padded,), np.int32)
+                        out = timed(
+                            "verify", (padded,),
+                            lambda: self.verifier.verify(
+                                self.params, self.kv.pools, jnp.asarray(bt),
+                                jnp.asarray(sl0), jnp.asarray(num_new),
+                                jnp.asarray(vtoks)))
+                        self.kv.swap_pools(out[-1])
+            self.warmup_seconds = time.perf_counter() - t_start
+            self.warmup_report = report
+            if self.telemetry is not None:
+                self.telemetry.on_warmup(self.warmup_seconds, len(report))
+            return report

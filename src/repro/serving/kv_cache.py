@@ -41,6 +41,7 @@ list), so they are sharding-oblivious by construction.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import hashlib
 from collections import OrderedDict
@@ -57,6 +58,22 @@ from repro.models import lm
 NULL_BLOCK = 0
 
 _DIGEST_SEED = b"twell-prefix-cache-v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocationPlan:
+    """A validated, not-yet-applied block-table allocation.
+
+    Built by ``plan_allocation`` from a consistent pool snapshot and applied
+    by ``commit_allocation`` — pure host bookkeeping, no device work. The
+    split lets the pipelined engine *plan* an admission while a launched
+    step is still executing: committing only claims free-list blocks or
+    refcount-zero LRU blocks, neither of which any in-flight block table
+    can reference, so the running device step is never perturbed."""
+
+    rid: int
+    n_blocks: int
+    matched: Tuple[int, ...]        # cached prefix blocks to share (incref)
 
 
 class PagedKVCache:
@@ -80,6 +97,7 @@ class PagedKVCache:
                 cfg, mesh, num_blocks, block_size)
             self.pools = jax.device_put(self.pools, self.pool_shardings)
         self._copy_fn = None             # lazily-built jitted COW block copy
+        self.pool_generation = 0         # swap_pools() count (see below)
         # LIFO free list: recently-freed blocks are reused first (locality)
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self._tables: Dict[int, List[int]] = {}
@@ -91,6 +109,19 @@ class PagedKVCache:
         self._lru: "OrderedDict[int, None]" = OrderedDict()
         self.cow_count = 0               # copy-on-write events (tests/stats)
         self.evict_count = 0             # cached blocks reclaimed under pressure
+
+    def swap_pools(self, new_pools) -> None:
+        """Install the pool pytree returned by a donating jitted call.
+
+        Donation makes the pools double-buffered: each call consumes the
+        current buffer set and returns the other, so the handle swapped out
+        here is dead — it must never be passed to another call or read
+        again. The returned values may still be unmaterialized (async
+        dispatch); chaining the next call on them is safe and is exactly
+        how the pipelined engine launches decode/draft/verify/prefill and
+        COW copies back-to-back without a host sync."""
+        self.pools = new_pools
+        self.pool_generation += 1
 
     # ---- capacity ----------------------------------------------------------
 
@@ -208,6 +239,18 @@ class PagedKVCache:
         when the caller just ran ``plan_admission`` (it must be fresh: no
         allocation/free may intervene). Returns the number of *cached
         tokens* (matched blocks x block_size)."""
+        return self.commit_allocation(
+            self.plan_allocation(rid, tokens, n_blocks, matched=matched))
+
+    def plan_allocation(self, rid: int, tokens: Sequence[int],
+                        n_blocks: int,
+                        matched: Optional[List[int]] = None) \
+            -> AllocationPlan:
+        """Validate and describe — without mutating anything — the
+        allocation ``commit_allocation`` will apply. Raises exactly where
+        ``allocate_prefix`` used to (double table / bad n_blocks /
+        exhaustion), so planning surfaces every error before any state
+        changes."""
         if rid in self._tables:
             raise ValueError(f"request {rid} already has a block table")
         if matched is None:
@@ -220,18 +263,29 @@ class PagedKVCache:
         if need > avail:
             raise MemoryError(
                 f"KV pool exhausted: want {need} new, available {avail}")
+        return AllocationPlan(rid=rid, n_blocks=n_blocks,
+                              matched=tuple(matched))
+
+    def commit_allocation(self, plan: AllocationPlan) -> int:
+        """Apply a ``plan_allocation`` result: share the matched blocks
+        (incref; revive from the LRU if evictable) and claim the remainder
+        fresh. The plan must still be fresh — no allocation/free may have
+        intervened. Returns the cached-token count (matched x block_size)."""
+        if plan.rid in self._tables:
+            raise ValueError(
+                f"request {plan.rid} already has a block table")
         table: List[int] = []
-        for blk in matched:
+        for blk in plan.matched:
             if self._ref[blk] == 0:
                 self._lru.pop(blk)                       # revive from LRU
             self._ref[blk] += 1
             table.append(blk)
-        for _ in range(need):
+        for _ in range(plan.n_blocks - len(plan.matched)):
             blk = self._take_block()
             self._ref[blk] = 1
             table.append(blk)
-        self._tables[rid] = table
-        return len(matched) * self.block_size
+        self._tables[plan.rid] = table
+        return len(plan.matched) * self.block_size
 
     def register_prefix(self, rid: int, tokens: Sequence[int]) -> int:
         """Index ``rid``'s full prompt blocks in the prefix cache so later
@@ -274,8 +328,8 @@ class PagedKVCache:
                 return {k: v.at[:, dst].set(v[:, src])
                         for k, v in pools.items()}
             self._copy_fn = copy
-        self.pools = self._copy_fn(self.pools, jnp.int32(src),
-                                   jnp.int32(dst))
+        self.swap_pools(self._copy_fn(self.pools, jnp.int32(src),
+                                      jnp.int32(dst)))
 
     def ensure_writable(self, rid: int, block_idx: int) -> Optional[int]:
         """Copy-on-write guard: before writing into table slot ``block_idx``,

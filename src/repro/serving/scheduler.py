@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import abc
 from collections import deque
-from typing import Deque, Iterator, List, Optional, Sequence
+from typing import Deque, Dict, Iterator, List, Optional, Sequence
 
 from repro.serving.request import Request
 
@@ -162,6 +162,43 @@ class PriorityScheduler(Scheduler):
 
     def __iter__(self) -> Iterator[Request]:
         return iter(list(self._q))
+
+
+def plan_victims(scheduler: Scheduler, candidate: Request,
+                 running: Sequence[Request], kv, *, reserved: int,
+                 avail: int, need: int, other_slots: int,
+                 max_batch: int) -> Optional[List[Request]]:
+    """Plan the full preemption set that would let ``candidate`` fit, or
+    None when even preempting every victim the policy offers cannot help
+    (the engine then defers the candidate without wasting anyone's
+    KV/progress).
+
+    Pure planning — neither the scheduler queue nor the KV pool is
+    mutated. A victim's table block only becomes available if no OTHER
+    live request still references it (shared prefix blocks decref, they
+    don't free), so the refcounts of the whole plan are simulated;
+    growth reservations always return in full. The engine applies the
+    plan immediately (synchronous step) or defers it to collect
+    (pipelined step with device work in flight).
+    """
+    plan: List[Request] = []
+    sim_running = list(running)
+    sim_dec: Dict[int, int] = {}
+    freeable = 0
+    while True:
+        victim = scheduler.pick_victim(candidate, sim_running)
+        if victim is None:
+            return None
+        sim_running.remove(victim)
+        plan.append(victim)
+        for blk in kv.block_table(victim.rid):
+            sim_dec[blk] = sim_dec.get(blk, 0) + 1
+            if kv.ref_count(blk) == sim_dec[blk]:
+                freeable += 1                # last reference: frees/parks
+        freeable += victim.reserved_blocks
+        slot_ok = len(sim_running) + other_slots < max_batch
+        if slot_ok and avail + freeable - reserved >= need:
+            return plan
 
 
 _SCHEDULERS = {"fcfs": FCFSScheduler, "priority": PriorityScheduler}

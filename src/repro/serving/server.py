@@ -19,7 +19,8 @@ Endpoints:
                            A client disconnect mid-stream cancels the
                            request (its KV blocks free on the next step).
   POST /v1/cancel          {"id": "cmpl-<rid>"} -> {"cancelled": bool}
-  GET  /healthz            liveness + queue depths
+  GET  /healthz            liveness + queue depths; 503 until startup
+                           warmup precompilation (when enabled) finishes
   GET  /v1/stats           engine counters (finished/cancelled/preempted,
                            KV-pool picture) + a telemetry rollup (phase
                            timing means, cache hit rate, spec acceptance,
@@ -54,13 +55,20 @@ class ServingServer:
     """HTTP server + engine-stepping thread over one ``ServingEngine``."""
 
     def __init__(self, engine, host: str = "127.0.0.1", port: int = 8000,
-                 idle_wait_s: float = 0.05):
+                 idle_wait_s: float = 0.05, warmup: bool = False):
         self.engine = engine
         self.idle_wait_s = idle_wait_s
         self._work = threading.Event()        # submissions wake the loop
         self._stepped = threading.Condition() # notified after every step
         self._step_seq = 0                    # steps completed (under cond)
         self._stop = threading.Event()
+        # readiness gate: with warmup=True the engine thread precompiles the
+        # whole bucket grid before serving, and /healthz answers 503 until
+        # that finishes so load balancers don't route to a cold process
+        self._warmup = bool(warmup)
+        self._ready = threading.Event()
+        if not self._warmup:
+            self._ready.set()
         engine.on_new_work = self._work.set
         server = self
 
@@ -80,7 +88,8 @@ class ServingServer:
 
             def do_GET(self):
                 if self.path == "/healthz":
-                    self._json(200, server.health())
+                    h = server.health()
+                    self._json(200 if h["ok"] else 503, h)
                 elif self.path == "/v1/stats":
                     self._json(200, server.stats())
                 elif self.path == "/metrics":
@@ -223,6 +232,9 @@ class ServingServer:
     # ---- engine loop -------------------------------------------------------
 
     def _engine_loop(self) -> None:
+        if self._warmup and not self._ready.is_set():
+            self.engine.warmup()                # precompile the bucket grid
+            self._ready.set()
         while not self._stop.is_set():
             if self.engine.has_unfinished():
                 self.engine.step()              # publishes handle state...
@@ -252,6 +264,11 @@ class ServingServer:
             self._stepped.wait_for(
                 lambda: self._step_seq != seen or self._stop.is_set(),
                 timeout)
+
+    def wait_ready(self, timeout: Optional[float] = None) -> bool:
+        """Block until warmup precompilation finishes (immediately true when
+        the server was built with ``warmup=False``)."""
+        return self._ready.wait(timeout)
 
     def wait_finished(self, handle, timeout_per_step: float = 1.0) -> None:
         """Block until the handle is terminal (or shutdown). Missed-notify
@@ -284,14 +301,21 @@ class ServingServer:
         self.httpd.server_close()
         for t in self._threads:
             t.join(timeout=5.0)
+        flush = getattr(self.engine, "flush", None)
+        if flush is not None:
+            flush()          # drain any pipelined in-flight step (no-op sync)
 
     # ---- introspection -----------------------------------------------------
 
     def health(self) -> dict:
         e = self.engine
-        return {"ok": True,
-                "running": len(e.running), "prefilling": len(e.prefilling),
-                "waiting": len(e.scheduler), "steps": e._step_idx}
+        ready = self._ready.is_set()
+        out = {"ok": ready,
+               "running": len(e.running), "prefilling": len(e.prefilling),
+               "waiting": len(e.scheduler), "steps": e._step_idx}
+        if not ready:
+            out["warming_up"] = True
+        return out
 
     def stats(self) -> dict:
         e = self.engine

@@ -50,8 +50,17 @@ PHASE_VERIFY = "verify"
 PHASE_SAMPLE = "sample"          # host-side spec acceptance / rejection
 PHASE_ADMISSION = "admission"
 PHASE_PREFILL = "prefill"
-PHASE_HOST_SYNC = "host_sync"    # blocked on device results (StepStats.sync)
+PHASE_HOST_SYNC = "host_sync"    # blocked on device results (StepStats.sync;
+#                                  pipelined: RESIDUAL blocking at collect)
 PHASE_STEP = "step"              # whole-step wall time
+# Pipelined-engine phases (ServingEngine(pipeline=True) only): each step is
+# plan (pure host: cancel/admission planning) -> collect (resolve the
+# PREVIOUS launch, commit tokens) -> launch (dispatch, no blocking).
+PHASE_PLAN = "plan"
+PHASE_LAUNCH = "launch"
+PHASE_COLLECT = "collect"
+PHASE_OVERLAP = "overlap"        # previous launch -> its collect: wall time
+#                                  device(N) ran concurrently with host work
 
 
 def _fmt(v: float) -> str:
@@ -283,7 +292,8 @@ class ServingMetrics:
         self.step_phase_seconds = r.histogram(
             "serving_step_phase_seconds",
             "Engine step time split by phase (admission / prefill / decode "
-            "/ draft / verify / sample / host_sync / cancel / step)",
+            "/ draft / verify / sample / host_sync / cancel / step; "
+            "pipelined mode adds plan / launch / collect / overlap)",
             ("phase",))
         self.steps_total = r.counter(
             "serving_steps_total", "Engine step() iterations")
@@ -334,6 +344,16 @@ class ServingMetrics:
             "Bucketed-shape JIT cache misses by entrypoint "
             "(decode / prefill / draft / verify)",
             ("entry",))
+        self.warmup_seconds = r.gauge(
+            "serving_warmup_seconds",
+            "Startup precompile wall time over the full bucketed shape "
+            "grid (0 until warmup runs); after warmup, steady-state "
+            "serving should record zero serving_jit_compiles_total "
+            "increments")
+        self.warmup_shapes = r.gauge(
+            "serving_warmup_shapes",
+            "Bucketed (entrypoint, shape) combinations precompiled at "
+            "startup")
         self.build_info = r.gauge(
             "serving_build_info",
             "Engine build configuration (value is always 1)",
@@ -504,6 +524,11 @@ class Telemetry:
     def on_compile(self, entry: str) -> None:
         self.metrics.jit_compiles_total.inc(entry=entry)
 
+    def on_warmup(self, seconds: float, shapes: int) -> None:
+        """Record a completed startup precompile pass (engine.warmup)."""
+        self.metrics.warmup_seconds.set(seconds)
+        self.metrics.warmup_shapes.set(shapes)
+
     def on_step(self, *, kv, reserved: int, wall_s: float,
                 sync_s: float) -> None:
         """End-of-step rollup: whole-step + host-sync phase observations and
@@ -538,7 +563,8 @@ class Telemetry:
         out = {}
         for phase in (PHASE_CANCEL, PHASE_DECODE, PHASE_DRAFT, PHASE_VERIFY,
                       PHASE_SAMPLE, PHASE_ADMISSION, PHASE_PREFILL,
-                      PHASE_HOST_SYNC, PHASE_STEP):
+                      PHASE_HOST_SYNC, PHASE_STEP, PHASE_PLAN, PHASE_LAUNCH,
+                      PHASE_COLLECT, PHASE_OVERLAP):
             mean = self.metrics.step_phase_seconds.mean(phase=phase)
             if mean is not None:
                 out[phase] = mean * 1e3
@@ -586,5 +612,6 @@ class Telemetry:
             "jit_compiles": {
                 e: m.jit_compiles_total.value(entry=e)
                 for e in ("decode", "prefill", "draft", "verify")},
+            "warmup_seconds": m.warmup_seconds.value(),
             "trace_events": 0 if self.trace is None else len(self.trace),
         }

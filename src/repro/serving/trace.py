@@ -16,7 +16,10 @@ QUEUED→PREFILL→DECODE run). The completed list is surfaced on
 
 The ``TraceRecorder`` additionally keeps an engine-level timeline — one
 span per timed step phase (decode / draft / verify / admission / prefill /
-...) — and renders everything as Chrome-trace JSON (the ``traceEvents``
+...; the pipelined engine adds plan / launch / collect plus an ``overlap``
+span covering launch(N)→collect(N), i.e. the window where device compute
+and host planning ran concurrently) — and renders everything as
+Chrome-trace JSON (the ``traceEvents``
 array format): load the file in ``chrome://tracing`` or https://ui.perfetto.dev
 to see the whole-engine step timeline with one track per request. Event
 storage is bounded (``max_events``), oldest dropped first, so a long-lived
