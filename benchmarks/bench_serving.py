@@ -24,6 +24,13 @@ asserting greedy token identity with the synchronous engine and that the
 jit-compile counters stay flat after warmup (zero steady-state compiles),
 and reporting the residual sync_ms plus the measured plan/device overlap.
 
+An attention-backend sweep decodes the same batches at growing context
+lengths through the plain-JAX ``ref`` gather and the fused paged Pallas
+kernel (interpret mode off-TPU), asserting greedy token identity per
+bucket and reporting per-backend mean decode-step wall ms (the kernel's
+scaling with context length); the speed advantage itself is asserted only
+on a real TPU under the full profile.
+
 With ``--tp N`` every engine runs under an N-way tensor-parallel mesh
 (params + paged KV pools sharded over the model axis), and a third section
 asserts greedy outputs are token-identical to the unsharded engine — with
@@ -216,6 +223,61 @@ def run_churn(params, cfg, work, *, backend: str, scheduler: str,
             "tiers": {"hi": tier_stats(1), "lo": tier_stats(0)},
             "outputs": {rid: o.token_ids for rid, o in outs.items()
                         if o.finish_reason != "cancelled"}}
+
+
+def run_attention_sweep(params, cfg, *, backend: str, block_size: int,
+                        max_batch: int, seq_lens, out_tokens: int,
+                        prefill_chunk: int, seed: int, mesh=None,
+                        assert_speed: bool = False):
+    """Long-context decode sweep across attention backends.
+
+    One engine per attention backend (the plain-JAX ``ref`` gather + the
+    fused paged kernel — ``pallas`` on TPU, ``interpret`` elsewhere) decodes
+    the same fixed-length batches at every seq_len bucket up to the table
+    width. Greedy outputs must be token-identical per bucket; per-bucket
+    mean decode-step wall ms is reported so the kernel's scaling with
+    context length is trackable. The wall-clock advantage is asserted only
+    under ``assert_speed`` (full profile on a real TPU): interpret mode on
+    CPU exists for numerics, not speed.
+    """
+    kernel = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    attn_backends = ["ref", kernel]
+    max_seq = max(seq_lens)
+    rng = np.random.RandomState(seed)
+    prompts = {L: [rng.randint(0, cfg.vocab_size, L - out_tokens).tolist()
+                   for _ in range(max_batch)] for L in seq_lens}
+    per = {a: {} for a in attn_backends}
+    for attn in attn_backends:
+        engine = ServingEngine(params, cfg, backend=backend,
+                               attn_backend=attn, block_size=block_size,
+                               max_batch=max_batch, max_seq_len=max_seq,
+                               prefix_cache=False,
+                               prefill_chunk=prefill_chunk, mesh=mesh)
+        for L in seq_lens:
+            batch = [list(p) for p in prompts[L]]
+            engine.generate(batch, max_tokens=out_tokens)   # compile pass
+            engine.stats.clear()
+            outs = engine.generate(batch, max_tokens=out_tokens)
+            decode_ms = [s.wall_ms for s in engine.stats
+                         if s.decode_batch > 0 and s.prefill_tokens == 0]
+            per[attn][L] = {"ms": float(np.mean(decode_ms)),
+                            "outputs": [o.token_ids for o in outs]}
+    rows = []
+    for L in seq_lens:
+        assert per["ref"][L]["outputs"] == per[kernel][L]["outputs"], (
+            f"attention backend {kernel} diverged from ref at seq_len={L}")
+        rows.append({"seq_len": L, "pages": -(-L // block_size),
+                     "ref_step_wall_ms": per["ref"][L]["ms"],
+                     "kernel_step_wall_ms": per[kernel][L]["ms"]})
+    if assert_speed:
+        last = rows[-1]
+        assert last["kernel_step_wall_ms"] < last["ref_step_wall_ms"], (
+            f"paged kernel slower than ref at seq_len={last['seq_len']}: "
+            f"{last['kernel_step_wall_ms']:.2f} vs "
+            f"{last['ref_step_wall_ms']:.2f} ms")
+    return {"backends": attn_backends, "kernel": kernel,
+            "outputs_identical": True, "out_tokens": out_tokens,
+            "batch": max_batch, "sweep": rows}
 
 
 def run_backend(params, cfg, backend: str, work, *, block_size: int,
@@ -544,6 +606,23 @@ def main(argv=None):
     print("# scheduler identity: FCFS == priority token-identical "
           "(no contention)")
 
+    # ---- attention backends: long-context decode sweep --------------------
+    # ref (gather-pages SDPA) vs the fused paged kernel at growing context
+    # lengths: token identity is the gate everywhere; the wall-clock
+    # advantage is asserted only on a real TPU under the full profile
+    attn_seq_lens = [32, 64] if args.smoke else [32, 64, 128]
+    attention = run_attention_sweep(
+        params, cfg, backend=backend0, block_size=args.block_size,
+        max_batch=2, seq_lens=attn_seq_lens, out_tokens=8,
+        prefill_chunk=args.prefill_chunk, seed=args.seed, mesh=mesh,
+        assert_speed=not args.smoke and jax.default_backend() == "tpu")
+    print(f"# attention sweep (ref vs {attention['kernel']}, batch 2): "
+          "outputs token-identical at every bucket")
+    for row in attention["sweep"]:
+        print(f"#   seq_len={row['seq_len']:4d} ({row['pages']} pages): "
+              f"decode step {row['ref_step_wall_ms']:.2f}ms ref, "
+              f"{row['kernel_step_wall_ms']:.2f}ms {attention['kernel']}")
+
     # ---- tp identity: sharded == unsharded, spec + prefix cache on --------
     tp_identity = None
     if mesh is not None:
@@ -590,6 +669,7 @@ def main(argv=None):
             "smoke": args.smoke,
             "tp": args.tp,
             "tp_identity": tp_identity,
+            "attention": attention,
             "telemetry": {
                 "backend": backend0,
                 "outputs_identical": True,

@@ -50,6 +50,10 @@ _SMOKE: Dict[str, List[Tuple[str, str, float]]] = {
         ("churn.steps", "equal", 0),
         ("pipeline.outputs_identical", "equal", 0),
         ("pipeline.steady_compiles", "equal", 0),
+        ("attention.outputs_identical", "equal", 0),
+        ("attention.kernel", "equal", 0),
+        ("attention.sweep[].seq_len", "equal", 0),
+        ("attention.sweep[].pages", "equal", 0),
         ("pipeline.churn.steps", "equal", 0),
         ("pipeline.churn.cancelled", "equal", 0),
         ("pipeline.churn.preempted", "equal", 0),
@@ -69,6 +73,8 @@ _FULL: Dict[str, List[Tuple[str, str, float]]] = {
     "serving": _SMOKE["serving"] + [
         ("results[].toks_per_s", "rel", 0.50),
         ("results[].step_wall_ms_mean", "rel", 0.50),
+        ("attention.sweep[].ref_step_wall_ms", "rel", 0.50),
+        ("attention.sweep[].kernel_step_wall_ms", "rel", 0.50),
     ],
     "spec_decode": _SMOKE["spec_decode"] + [
         ("results[].toks_per_s", "rel", 0.50),

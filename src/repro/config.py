@@ -74,6 +74,12 @@ class ModelConfig:
     encoder_layers: int = 0
     cross_every: int = 0            # vlm: cross-attention layer period
     num_image_tokens: int = 1024    # vlm patch-embedding stub length
+    # ---- serving -------------------------------------------------------------
+    # Paged-attention backend for the serving engine (see
+    # repro/serving/attention.py): "ref" = gather-pages SDPA in plain JAX
+    # (the numerics reference), "pallas" = fused paged Pallas kernels (TPU),
+    # "interpret" = the same kernels in Pallas interpret mode (CPU CI).
+    attn_backend: str = "ref"
     # ---- numerics / memory ---------------------------------------------------
     dtype: str = "bfloat16"
     param_dtype: str = "bfloat16"

@@ -80,3 +80,33 @@ def flash_attention(q, k, v):
         return ref.flash_attention(q, k, v)
     from repro.kernels.flash_attention import flash_attention_pallas
     return flash_attention_pallas(q, k, v, interpret=(mode == "interpret"))
+
+
+def paged_attention_decode(q, kpool, vpool, block_tables, seq_lens,
+                           mode: str = ""):
+    """Paged decode attention read (scatter happens in the caller). The
+    serving engine passes ``mode`` explicitly from its ``--attn-backend``
+    flag; bare calls fall back to the platform default like the FFN ops."""
+    mode = mode or _mode()
+    if mode == "ref":
+        return ref.paged_attention_decode(q, kpool, vpool, block_tables,
+                                          seq_lens)
+    from repro.kernels.paged_decode_attention import (
+        paged_decode_attention_pallas)
+    return paged_decode_attention_pallas(
+        q, kpool, vpool, block_tables, seq_lens,
+        interpret=(mode == "interpret"))
+
+
+def paged_attention_extend(q, kpool, vpool, block_tables, seq_lens, num_new,
+                           mode: str = ""):
+    """Chunk-append attention read (prefill / chunked prefill / verify)."""
+    mode = mode or _mode()
+    if mode == "ref":
+        return ref.paged_attention_extend(q, kpool, vpool, block_tables,
+                                          seq_lens, num_new)
+    from repro.kernels.paged_chunk_attention import (
+        paged_chunk_attention_pallas)
+    return paged_chunk_attention_pallas(
+        q, kpool, vpool, block_tables, seq_lens, num_new,
+        interpret=(mode == "interpret"))

@@ -1,0 +1,120 @@
+"""Paged chunk-append attention Pallas kernel (prefill / chunked-prefill /
+speculative-verify regime).
+
+Each request appends ``num_new`` tokens at logical positions
+``seq_len .. seq_len+num_new-1``; its chunk queries attend the full paged
+history *plus* the causal prefix of the chunk itself (the chunk's K/V are
+already scattered into the pools by the caller). The block table and the
+per-request ``seq_lens``/``num_new`` are scalar-prefetch operands, so the
+kernel walks only the pages a row's live span covers — pages past
+``seq_len + num_new - 1`` are skipped via ``pl.when``.
+
+Grid: ``(B, Hkv, W)`` — pages innermost, one online-softmax pass per
+(request, kv-head) over that request's live pages. GQA queries ride as a
+``G*S`` row axis per kv head (row j ↦ group j // S, chunk offset j % S), so
+no ``repeat_kv`` materialization. Rows in the padded tail
+(``j % S >= num_new``) produce garbage the engine discards (zeros when the
+row has no live pages at all — never NaN).
+
+Numerics mirror ``kernels.ref.paged_attention_extend``: f32 logits/softmax,
+-1e30 mask, 1/sqrt(hd) scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _chunk_kernel(bt_ref, sl_ref, nn_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_s, l_s, acc_s, *, bs, width, chunk, scale):
+    b = pl.program_id(0)
+    page = pl.program_id(2)
+
+    @pl.when(page == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, -1e30)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    sl = sl_ref[b]
+    nn = nn_ref[b]
+    # last live logical position for this request; num_new == 0 (padded
+    # batch row) makes it negative -> no live pages at all
+    last = sl + nn - 1
+    live = page * bs <= last
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]                                    # (G*S, hd)
+        k = k_ref[0, :, 0, :]                              # (bs, hd)
+        v = v_ref[0, :, 0, :]
+        s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32) * scale
+        # row j is chunk offset j % S of head-group j // S: query position
+        # sl + j % S (full history + causal within the chunk)
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        qpos = sl + row % chunk
+        kpos = page * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= qpos, s, -1e30)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_s[...] = acc_s[...] * corr + jnp.dot(
+            p, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(page == width - 1)
+    def _finish():
+        o_ref[0, 0] = acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_chunk_attention_pallas(q, kpool, vpool, block_tables, seq_lens,
+                                 num_new, *, interpret: bool = False):
+    """q: (B, S, H, hd); pools: (N, bs, Hkv, hd); block_tables: (B, W);
+    seq_lens/num_new: (B,). Returns (B, S, H, hd) in q.dtype."""
+    b, s, h, hd = q.shape
+    _, bs, hkv, _ = kpool.shape
+    width = block_tables.shape[1]
+    g = h // hkv
+    scale = 1.0 / (hd ** 0.5)
+    # (B, S, H, hd) -> (B, Hkv, G*S, hd): head h = hkv_idx * G + g_idx, and
+    # row j = g_idx * S + chunk offset, matching repeat_kv's group broadcast
+    qg = q.reshape(b, s, hkv, g, hd).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(b, hkv, g * s, hd)
+    kernel = functools.partial(_chunk_kernel, bs=bs, width=width,
+                               chunk=s, scale=scale)
+
+    def kv_map(bi, hi, pi, bt_ref, sl_ref, nn_ref):
+        return (bt_ref[bi, pi], 0, hi, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(b, hkv, width),
+            in_specs=[
+                pl.BlockSpec((1, 1, g * s, hd),
+                             lambda bi, hi, pi, bt, sl, nn: (bi, hi, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd), kv_map),
+                pl.BlockSpec((1, bs, 1, hd), kv_map),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, g * s, hd),
+                lambda bi, hi, pi, bt, sl, nn: (bi, hi, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((g * s, 1), jnp.float32),
+                            pltpu.VMEM((g * s, 1), jnp.float32),
+                            pltpu.VMEM((g * s, hd), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g * s, hd), jnp.float32),
+        interpret=interpret,
+    )(block_tables, seq_lens, num_new, qg, kpool, vpool)
+
+    out = out.reshape(b, hkv, g, s, hd).transpose(0, 3, 1, 2, 4)
+    return out.reshape(b, s, h, hd).astype(q.dtype)

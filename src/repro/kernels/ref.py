@@ -61,6 +61,65 @@ def dense_to_hybrid(x, w, pattern: hybrid_fmt.HybridActs) -> hybrid_fmt.HybridAc
     return hybrid_fmt.dense_to_hybrid_matmul(x, w, pattern)
 
 
+def paged_attention_decode(q, kpool, vpool, block_tables, seq_lens) -> jax.Array:
+    """Paged decode-attention oracle: gather every table page, repeat KV
+    heads, masked SDPA over kpos <= seq_len.
+
+    q:            (B, 1, H, hd) roped queries (one token per request)
+    kpool/vpool:  (num_blocks, block_size, Hkv, hd) page pools (new token
+                  already scattered at logical position ``seq_len``)
+    block_tables: (B, W) physical block ids (0 = null block)
+    seq_lens:     (B,) tokens cached per request *before* this step
+    """
+    b, _, h, hd = q.shape
+    hkv = kpool.shape[2]
+    scale = 1.0 / (hd ** 0.5)
+    kf = repeat_kv(kpool[block_tables].reshape(b, -1, hkv, hd), h)
+    vf = repeat_kv(vpool[block_tables].reshape(b, -1, hkv, hd), h)
+    kpos = jnp.arange(kf.shape[1])
+    mask = (kpos[None, :] <= seq_lens[:, None])[:, None, None, :]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32) * scale
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+
+
+def paged_attention_extend(q, kpool, vpool, block_tables, seq_lens,
+                           num_new=None) -> jax.Array:
+    """Chunk-append attention oracle: row j of the chunk attends the full
+    history plus the chunk prefix (kpos <= seq_len + j).
+
+    q: (B, S, H, hd); the chunk's K/V are already scattered into the pools.
+    ``num_new`` (B,) marks the valid chunk prefix per row — rows at or past
+    it are padding whose output is garbage in both oracle and kernel (the
+    caller discards them), so the oracle ignores it for masking.
+    """
+    del num_new
+    b, s, h, hd = q.shape
+    hkv = kpool.shape[2]
+    scale = 1.0 / (hd ** 0.5)
+    kf = repeat_kv(kpool[block_tables].reshape(b, -1, hkv, hd), h)
+    vf = repeat_kv(vpool[block_tables].reshape(b, -1, hkv, hd), h)
+    pos = seq_lens[:, None] + jnp.arange(s)[None, :]               # (B, S)
+    kpos = jnp.arange(kf.shape[1])
+    mask = (kpos[None, None, :] <= pos[:, :, None])[:, None]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32) * scale
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+
+
+def repeat_kv(k, n_heads: int):
+    """(B, S, Hkv, hd) -> (B, S, H, hd) by group broadcast (mirror of
+    models.layers.repeat_kv, duplicated to keep kernels import-light)."""
+    b, s, hkv, hd = k.shape
+    if hkv == n_heads:
+        return k
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, hkv, n_heads // hkv, hd)
+    ).reshape(b, s, n_heads, hd)
+
+
 def flash_attention(q, k, v, causal: bool = True) -> jax.Array:
     """(B, S, H, hd) causal attention oracle (f32 softmax)."""
     s = q.shape[1]

@@ -81,6 +81,13 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--ffn-impl", default="gather",
                     help="dense | gather (TwELL fused path) | tile_skip")
+    ap.add_argument("--attn-backend", default="ref",
+                    choices=("ref", "pallas", "interpret"),
+                    help="paged-attention read path: ref (gather-pages "
+                         "SDPA, the numerics reference), pallas (fused "
+                         "paged kernels, TPU only), interpret (same "
+                         "kernels via Pallas interpret mode — CPU-safe, "
+                         "slow). Validated against the platform at startup")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged KV-cache block size (tokens)")
     ap.add_argument("--prefill-chunk", type=int, default=64,
@@ -230,7 +237,8 @@ def main(argv=None):
     use_pipeline = args.http if args.pipeline is None else args.pipeline
     use_warmup = args.http if args.warmup is None else args.warmup
     engine = ServingEngine(
-        params, cfg, backend=args.ffn_impl, block_size=args.block_size,
+        params, cfg, backend=args.ffn_impl,
+        attn_backend=args.attn_backend, block_size=args.block_size,
         max_batch=args.max_batch or args.batch,
         max_seq_len=args.prompt_len + args.gen, seed=args.seed, spec=spec,
         prefix_cache=not args.no_prefix_cache,
@@ -259,7 +267,8 @@ def main(argv=None):
         signal.signal(signal.SIGINT, _sig)
         signal.signal(signal.SIGTERM, _sig)
         print(f"[serve/http] listening on http://{server.host}:{server.port} "
-              f"(backend={args.ffn_impl}, scheduler={args.scheduler}, "
+              f"(backend={args.ffn_impl}, attn={args.attn_backend}, "
+              f"scheduler={args.scheduler}, "
               f"tp={args.tp}; POST /v1/completions, GET /healthz"
               + (", GET /metrics" if use_telemetry else "") + ")",
               flush=True)
@@ -296,7 +305,7 @@ def main(argv=None):
     toks = np.concatenate([np.asarray(prompt), gen_toks], axis=1)
     print(f"[serve/engine] generated {toks.shape} in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s, backend={args.ffn_impl}, "
-          f"block_size={args.block_size}, "
+          f"attn={args.attn_backend}, block_size={args.block_size}, "
           f"ttft mean {np.mean(ttft) * 1e3:.1f}ms)")
     if engine.prefix_cache and engine.cached_tokens_total:
         print(f"[serve/engine] prefix cache: "

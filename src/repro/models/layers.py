@@ -195,7 +195,7 @@ def _banded(q, k, v, scale, band_chunk: int, lookback: int,
     return out.reshape(b, s, h, hd)
 
 
-def _paged_attention(q, k, v, cache, n_heads, scale):
+def _paged_attention(q, k, v, cache, cfg, n_heads, scale):
     """Paged-KV attention (serving engine).
 
     cache = {"kpool", "vpool", "block_tables", "seq_lens"} for ONE layer:
@@ -205,25 +205,33 @@ def _paged_attention(q, k, v, cache, n_heads, scale):
 
     q/k/v arrive roped with per-request absolute positions. Two regimes:
       decode (S == 1): scatter the new K/V at logical position ``seq_len``
-        into the request's page, gather its pages, masked SDPA over
-        kpos <= seq_len. Optional cache["write_valid"] (B,) bool routes a
-        row's write to the null block (speculative draft steps past a
-        request's budget draft nothing).
+        into the request's page, then read over kpos <= seq_len. Optional
+        cache["write_valid"] (B,) bool routes a row's write to the null
+        block (speculative draft steps past a request's budget draft
+        nothing).
       chunk-append (S > 1, cache has "num_new"): the chunk *appends to
         existing history* — one path serves prefill (history empty),
         chunked/prefix-cached prefill (history = cached prefix), and
         speculative verify (history = committed tokens). Row positions are
         seq_len..seq_len+num_new-1 (num_new (B,) valid chunk lengths; the
-        padded tail routes to the null block); K/V scatter there, then SDPA
-        over the gathered pages with mask kpos <= seq_len + j (full history
-        + causal within the chunk).
+        padded tail routes to the null block); K/V scatter there, then the
+        read masks kpos <= seq_len + j (full history + causal within the
+        chunk).
     Padded batch rows carry an all-null table, so their writes land in the
     null block and their outputs are garbage the engine discards.
+
+    The scatter (including write_valid / padded-tail null-block routing) is
+    shared plain JAX; ``cfg.attn_backend`` selects how the scattered pools
+    are *read*. "ref" is the inline gather-pages SDPA below (the numerics
+    reference); "pallas"/"interpret" dispatch to the fused paged-attention
+    kernels through ``repro.serving.attention`` (block tables consumed
+    in-kernel — only live pages are touched, no repeat_kv materialization).
     """
     kpool, vpool = cache["kpool"], cache["vpool"]
     bt, sl = cache["block_tables"], cache["seq_lens"]
     b, s, hkv, hd = k.shape
     bs_blk = kpool.shape[1]
+    backend = getattr(cfg, "attn_backend", "ref")
     # tensor-parallel serving: per-head tensors split over the model axis,
     # matching the pool's kv-head sharding, so scatter/gather and the SDPA
     # run shard-local and only the wo projection all-reduces. No-ops (and
@@ -240,14 +248,18 @@ def _paged_attention(q, k, v, cache, n_heads, scale):
             off = jnp.where(wv, off, 0)
         kpool = kpool.at[blk, off].set(k[:, 0])
         vpool = vpool.at[blk, off].set(v[:, 0])
-        kf = shard_act(repeat_kv(kpool[bt].reshape(b, -1, hkv, hd), n_heads),
-                       None, None, "model", None)
-        vf = shard_act(repeat_kv(vpool[bt].reshape(b, -1, hkv, hd), n_heads),
-                       None, None, "model", None)
-        kpos = jnp.arange(kf.shape[1])
-        mask = (kpos[None, :] <= sl[:, None])[:, None, None, :]
-        out = shard_act(_sdpa(q, kf, vf, mask, scale),
-                        None, None, "model", None)
+        if backend != "ref":
+            out = _attn_backend(backend).forward_decode(
+                q, kpool, vpool, bt, sl)
+        else:
+            kf = shard_act(repeat_kv(kpool[bt].reshape(b, -1, hkv, hd),
+                                     n_heads), None, None, "model", None)
+            vf = shard_act(repeat_kv(vpool[bt].reshape(b, -1, hkv, hd),
+                                     n_heads), None, None, "model", None)
+            kpos = jnp.arange(kf.shape[1])
+            mask = (kpos[None, :] <= sl[:, None])[:, None, None, :]
+            out = _sdpa(q, kf, vf, mask, scale)
+        out = shard_act(out, None, None, "model", None)
     else:                                          # chunk-append w/ history
         idx = jnp.arange(s)
         valid = idx[None, :] < cache["num_new"][:, None]           # (B, S)
@@ -259,17 +271,30 @@ def _paged_attention(q, k, v, cache, n_heads, scale):
             k.reshape(b * s, hkv, hd))
         vpool = vpool.at[blk.reshape(-1), off.reshape(-1)].set(
             v.reshape(b * s, hkv, hd))
-        kf = shard_act(repeat_kv(kpool[bt].reshape(b, -1, hkv, hd), n_heads),
-                       None, None, "model", None)
-        vf = shard_act(repeat_kv(vpool[bt].reshape(b, -1, hkv, hd), n_heads),
-                       None, None, "model", None)
-        kpos = jnp.arange(kf.shape[1])
-        mask = (kpos[None, None, :] <= pos[:, :, None])[:, None]
-        out = shard_act(_sdpa(q, kf, vf, mask, scale),
-                        None, None, "model", None)
+        if backend != "ref":
+            out = _attn_backend(backend).forward_extend(
+                q, kpool, vpool, bt, sl, cache["num_new"])
+        else:
+            kf = shard_act(repeat_kv(kpool[bt].reshape(b, -1, hkv, hd),
+                                     n_heads), None, None, "model", None)
+            vf = shard_act(repeat_kv(vpool[bt].reshape(b, -1, hkv, hd),
+                                     n_heads), None, None, "model", None)
+            kpos = jnp.arange(kf.shape[1])
+            mask = (kpos[None, None, :] <= pos[:, :, None])[:, None]
+            out = _sdpa(q, kf, vf, mask, scale)
+        out = shard_act(out, None, None, "model", None)
     out_cache = dict(cache)
     out_cache.update(kpool=kpool, vpool=vpool)
     return out, out_cache
+
+
+def _attn_backend(name: str):
+    """Resolve a non-ref attention backend lazily: importing
+    ``repro.serving`` at module scope would cycle back into this module
+    (serving.engine -> models.lm -> models.layers), so the lookup happens
+    at trace time, when both modules are fully loaded."""
+    from repro.serving.attention import get_attn_backend
+    return get_attn_backend(name)
 
 
 def attention(params: Dict, x: jax.Array, cfg, *, positions: jax.Array,
@@ -310,7 +335,7 @@ def attention(params: Dict, x: jax.Array, cfg, *, positions: jax.Array,
 
     new_cache = None
     if cache is not None and "kpool" in cache:
-        out, new_cache = _paged_attention(q, k, v, cache, h, scale)
+        out, new_cache = _paged_attention(q, k, v, cache, cfg, h, scale)
     elif cache is not None and kind != "cross":
         # decode: append to (ring) cache. cache["k"]: (B, S_cache, Hkv, hd)
         pos = cache["pos"]                                        # scalar int

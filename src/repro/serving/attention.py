@@ -1,0 +1,174 @@
+"""Pluggable paged-attention backends for the serving engine.
+
+Sibling of the FFN ``ServingBackend`` split (``serving/backends.py``), same
+sglang ``AttentionBackend`` shape: one object picks the *attention read*
+implementation for both serving regimes — ``forward_decode`` (one query
+token against the paged history) and ``forward_extend`` (a chunk appended
+to history: prefill, chunked/prefix-cached prefill, speculative verify).
+The page scatter, ``write_valid`` null-block routing, and ``num_new``
+padded-tail routing stay shared plain-JAX in ``models.layers`` — backends
+differ only in how the scattered pools are read:
+
+  ref        gather every table page + repeat_kv + masked SDPA (plain JAX —
+             the numerics reference every other backend is tested against)
+  pallas     fused Pallas kernels (flash-decoding split-K decode kernel +
+             chunk-append kernel); block tables consumed in-kernel so only
+             live pages are touched. TPU only.
+  interpret  the same kernels through Pallas interpret mode — runs on CPU,
+             used by CI to pin kernel semantics to the ref backend.
+
+Under a tensor-parallel mesh the kernel backends run inside ``shard_map``
+over the ``model`` axis (q/pools head-sharded, tables/lens replicated),
+matching the ref path's head sharding, so the per-device kernel sees local
+head counts and only the downstream wo projection all-reduces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from abc import ABC, abstractmethod
+from typing import Dict, Type
+
+import jax
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+
+
+class AttentionBackend(ABC):
+    """Selects the paged-attention read path for each serving regime."""
+
+    name: str = "abstract"
+    kernel_mode: str = "ref"        # repro.kernels.ops dispatch mode
+
+    def configure(self, cfg: ModelConfig) -> ModelConfig:
+        """A config whose paged-attention path is this backend."""
+        return dataclasses.replace(cfg, attn_backend=self.name)
+
+    def validate_platform(self, platform: str) -> None:
+        """Reject backend/platform pairs that cannot execute (called once at
+        engine startup, mirroring ``kernels.ops._mode`` dispatch)."""
+
+    @abstractmethod
+    def forward_decode(self, q, kpool, vpool, block_tables, seq_lens):
+        """(B, 1, H, hd) decode-attention read over the paged history."""
+
+    @abstractmethod
+    def forward_extend(self, q, kpool, vpool, block_tables, seq_lens,
+                       num_new):
+        """(B, S, H, hd) chunk-append read: history + causal-within-chunk."""
+
+    def describe(self) -> str:
+        return f"{self.name}: kernel_mode={self.kernel_mode}"
+
+
+class RefAttentionBackend(AttentionBackend):
+    """Gather-pages SDPA in plain JAX — the numerics reference. The engine
+    short-circuits this backend inside ``models.layers._paged_attention``
+    (shared-sharding fast path); these methods exist so tests and tools can
+    call every backend through one interface."""
+
+    name = "ref"
+    kernel_mode = "ref"
+
+    def forward_decode(self, q, kpool, vpool, block_tables, seq_lens):
+        return ops.paged_attention_decode(q, kpool, vpool, block_tables,
+                                          seq_lens, mode="ref")
+
+    def forward_extend(self, q, kpool, vpool, block_tables, seq_lens,
+                       num_new):
+        return ops.paged_attention_extend(q, kpool, vpool, block_tables,
+                                          seq_lens, num_new, mode="ref")
+
+
+def _shard_mapped(fn, q, kpool, vpool, *scalars):
+    """Run a paged-attention kernel shard-local over the ``model`` axis.
+
+    Pallas calls are opaque to GSPMD, so unlike the ref path (sharding
+    constraints on einsums) the kernel must be explicitly mapped: q and the
+    pools split on their head axis (dim 2), block tables / seq_lens / num_new
+    replicated. Degrades to a direct call without a mesh or when heads don't
+    divide — same policy as ``sharding.shard_act``."""
+    from repro.distributed.sharding import current_mesh
+    mesh = current_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return fn(q, kpool, vpool, *scalars)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    tp = sizes["model"]
+    if tp <= 1 or q.shape[2] % tp or kpool.shape[2] % tp:
+        return fn(q, kpool, vpool, *scalars)
+    from jax.experimental.shard_map import shard_map
+    P = jax.sharding.PartitionSpec
+    heads = P(None, None, "model", None)
+    mapped = shard_map(
+        fn, mesh=mesh,
+        in_specs=(heads, heads, heads) + tuple(P() for _ in scalars),
+        out_specs=heads, check_rep=False)
+    return mapped(q, kpool, vpool, *scalars)
+
+
+class PallasAttentionBackend(AttentionBackend):
+    """Fused paged-attention Pallas kernels (flash-decoding decode +
+    chunk-append extend). Compiled TPU execution; refuse anything else at
+    startup instead of failing deep inside the first jitted step."""
+
+    name = "pallas"
+    kernel_mode = "pallas"
+
+    def validate_platform(self, platform: str) -> None:
+        if platform != "tpu":
+            raise ValueError(
+                f"attention backend {self.name!r} requires TPU, got "
+                f"platform {platform!r} — use attn_backend='interpret' "
+                f"(same kernels, Pallas interpret mode) or 'ref' on CPU")
+
+    def forward_decode(self, q, kpool, vpool, block_tables, seq_lens):
+        def call(q, kpool, vpool, bt, sl):
+            return ops.paged_attention_decode(q, kpool, vpool, bt, sl,
+                                              mode=self.kernel_mode)
+        return _shard_mapped(call, q, kpool, vpool, block_tables, seq_lens)
+
+    def forward_extend(self, q, kpool, vpool, block_tables, seq_lens,
+                       num_new):
+        def call(q, kpool, vpool, bt, sl, nn):
+            return ops.paged_attention_extend(q, kpool, vpool, bt, sl, nn,
+                                              mode=self.kernel_mode)
+        return _shard_mapped(call, q, kpool, vpool, block_tables, seq_lens,
+                             num_new)
+
+
+class InterpretAttentionBackend(PallasAttentionBackend):
+    """The Pallas kernels evaluated in interpret mode — platform-agnostic
+    (lowers to plain lax ops), so CPU CI can pin kernel numerics and engine
+    token identity against the ref backend without TPU hardware."""
+
+    name = "interpret"
+    kernel_mode = "interpret"
+
+    def validate_platform(self, platform: str) -> None:
+        pass
+
+
+_REGISTRY: Dict[str, Type[AttentionBackend]] = {}
+
+
+def register(cls: Type[AttentionBackend]) -> Type[AttentionBackend]:
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+for _cls in (RefAttentionBackend, PallasAttentionBackend,
+             InterpretAttentionBackend):
+    register(_cls)
+
+ATTN_BACKENDS = tuple(sorted(_REGISTRY))
+
+
+def get_attn_backend(name_or_backend, **kwargs) -> AttentionBackend:
+    """Resolve an attention backend by name (or pass an instance through)."""
+    if isinstance(name_or_backend, AttentionBackend):
+        return name_or_backend
+    try:
+        return _REGISTRY[name_or_backend](**kwargs)
+    except KeyError:
+        raise ValueError(f"unknown attention backend {name_or_backend!r}; "
+                         f"have {sorted(_REGISTRY)}") from None

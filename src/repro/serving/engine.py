@@ -91,6 +91,7 @@ from repro.distributed import sharding
 from repro.models import lm
 from repro.observability import accounting
 from repro.serving import sampling as sampling_mod
+from repro.serving.attention import get_attn_backend
 from repro.serving.backends import (DECODE, PREFILL, get_backend,
                                     make_draft_pair)
 from repro.serving.kv_cache import PagedKVCache
@@ -160,6 +161,7 @@ class ServingEngine:
     """Continuous-batching engine serving one model on one set of weights."""
 
     def __init__(self, params, cfg: ModelConfig, *, backend="dense",
+                 attn_backend="ref",
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  max_batch: int = 8, max_seq_len: int = 256,
                  min_prefill_bucket: int = 16, seed: int = 0,
@@ -171,6 +173,12 @@ class ServingEngine:
                  telemetry: Union[bool, Telemetry, None] = False,
                  pipeline: bool = False, warmup: bool = False):
         self.backend = get_backend(backend)
+        # attention backend first: configure() stamps cfg.attn_backend, and
+        # every derived config below (prefill/decode/draft/verify) must
+        # inherit it so all regimes read the paged KV the same way
+        self.attn = get_attn_backend(attn_backend)
+        self.attn.validate_platform(jax.default_backend())
+        cfg = self.attn.configure(cfg)
         self.cfg = cfg
         self.cfg_prefill = self.backend.configure(cfg, PREFILL)
         self.cfg_decode = self.backend.configure(cfg, DECODE)
@@ -228,7 +236,8 @@ class ServingEngine:
         self.telemetry: Optional[Telemetry] = telemetry
         if telemetry is not None:
             telemetry.metrics.build_info.set(
-                1, backend=self.backend.name, scheduler=self.scheduler.name,
+                1, backend=self.backend.name, attn_backend=self.attn.name,
+                scheduler=self.scheduler.name,
                 spec_k=str(0 if spec is None else spec.k),
                 tp=str(1 if mesh is None else mesh.devices.size))
             if spec is not None:
@@ -644,8 +653,14 @@ class ServingEngine:
             live = list(self._requests.values())
         self.telemetry.trace.export(path, live_requests=live)
 
-    def _jit_decode(self, padded_batch: int, greedy: bool):
-        if (padded_batch, greedy) not in self._decode_fns:
+    def _jit_decode(self, padded_batch: int, width: int, greedy: bool):
+        """``width`` is the bucketed block-table width the step runs at —
+        decode gathers (ref) / walks (kernel) only ``width`` table columns
+        instead of the full ``table_width``, so short-context steps stop
+        paying for the padded span. It must be part of the cache key: jax
+        would silently re-specialize on a new bt shape without going
+        through here, bypassing the jit_compiles counter."""
+        if (padded_batch, width, greedy) not in self._decode_fns:
             if self.telemetry is not None:
                 self.telemetry.on_compile("decode")
             cfg = self.cfg_decode
@@ -668,8 +683,8 @@ class ServingEngine:
                                                topps)
                 return (tok, last, aux, pools) if probe else \
                     (tok, last, pools)
-            self._decode_fns[(padded_batch, greedy)] = fn
-        return self._decode_fns[(padded_batch, greedy)]
+            self._decode_fns[(padded_batch, width, greedy)] = fn
+        return self._decode_fns[(padded_batch, width, greedy)]
 
     def _jit_prefill(self, padded_batch: int, padded_chunk: int,
                      greedy: bool):
@@ -832,8 +847,14 @@ class ServingEngine:
                 self.kv.append_block(r.rid)
                 r.reserved_blocks -= 1
                 self._reserved -= 1
-        bt = self.kv.table_array([r.rid for r in batch], padded,
-                                 self.table_width)
+        # clamp the table to the batch's live page span (bucketed so the
+        # shape grid stays warm): masked-out columns contribute exactly 0
+        # to the softmax either way, so truncation is numerics-free, and
+        # the gather/kernel cost tracks max(seq_lens) instead of the full
+        # padded table width
+        width = _bucket(max(len(self.kv.block_table(r.rid)) for r in batch),
+                        1, self.table_width)
+        bt = self.kv.table_array([r.rid for r in batch], padded, width)
         sl = np.zeros((padded,), np.int32)
         toks = np.zeros((padded, 1), np.int32)
         temps = np.zeros((padded,), np.float32)
@@ -853,7 +874,7 @@ class ServingEngine:
                               jnp.int32)
             keys = keys.at[:b].set(sampling_mod.batch_keys(base, pos))
         with self._mesh_ctx():
-            fn = self._jit_decode(padded, all_greedy)
+            fn = self._jit_decode(padded, width, all_greedy)
             out = fn(
                 self.params, self.kv.pools, jnp.asarray(bt), jnp.asarray(sl),
                 jnp.asarray(toks), keys, jnp.asarray(temps),
@@ -1294,18 +1315,23 @@ class ServingEngine:
 
             with self._mesh_ctx():
                 for padded in batches:
-                    bt, sl, temps, topks, topps = null_args(padded)
+                    _, sl, temps, topks, topps = null_args(padded)
                     toks = np.zeros((padded, 1), np.int32)
                     keys = jnp.zeros((padded, 2), jnp.uint32)
-                    for greedy in (True, False):
-                        fn = self._jit_decode(padded, greedy)
-                        out = timed(
-                            "decode", (padded, greedy), lambda: fn(
-                                self.params, self.kv.pools, jnp.asarray(bt),
-                                jnp.asarray(sl), jnp.asarray(toks), keys,
-                                jnp.asarray(temps), jnp.asarray(topks),
-                                jnp.asarray(topps)))
-                        self.kv.swap_pools(out[-1])
+                    # decode runs at a clamped, bucketed table width (see
+                    # _launch_decode) — precompile every width bucket too
+                    for w in bucket_grid(1, width):
+                        bt = np.zeros((padded, w), np.int32)
+                        for greedy in (True, False):
+                            fn = self._jit_decode(padded, w, greedy)
+                            out = timed(
+                                "decode", (padded, w, greedy), lambda: fn(
+                                    self.params, self.kv.pools,
+                                    jnp.asarray(bt), jnp.asarray(sl),
+                                    jnp.asarray(toks), keys,
+                                    jnp.asarray(temps), jnp.asarray(topks),
+                                    jnp.asarray(topps)))
+                            self.kv.swap_pools(out[-1])
                 for padded in batches:
                     for chunk in chunks:
                         bt, start, temps, topks, topps = null_args(padded)

@@ -357,7 +357,7 @@ class ServingMetrics:
         self.build_info = r.gauge(
             "serving_build_info",
             "Engine build configuration (value is always 1)",
-            ("backend", "scheduler", "spec_k", "tp"))
+            ("backend", "attn_backend", "scheduler", "spec_k", "tp"))
         self.ffn_sparsity = r.gauge(
             "serving_ffn_sparsity",
             "Per-layer FFN activation sparsity (1 - nnz/d_ff) from the most "

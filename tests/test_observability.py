@@ -316,6 +316,10 @@ class TestCompareGate:
                          "cached_tokens": 0, "cache_hit_rate": 0.0,
                          "toks_per_s": 100.0, "step_wall_ms_mean": 1.5}],
             "telemetry": {"outputs_identical": True},
+            "attention": {"outputs_identical": True, "kernel": "interpret",
+                          "sweep": [{"seq_len": 32, "pages": 4,
+                                     "ref_step_wall_ms": 1.0,
+                                     "kernel_step_wall_ms": 1.2}]},
             "tp_identity": None,
             "scheduler_identity": {"outputs_identical": True},
             "shared_prefix": {"cache_hit_rate": 0.571,

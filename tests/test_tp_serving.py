@@ -180,6 +180,45 @@ def test_tp4_token_identity_dense():
     assert "TP_IDENTITY_OK" in out
 
 
+def test_tp2_attention_backend_identity():
+    """Greedy outputs identical across attention backends (ref gather-pages
+    SDPA vs the paged Pallas kernels in interpret mode) under tp=2
+    head-sharded pools, with spec decode + chunked prefill + prefix cache
+    active — the kernel's shard_map split over the model axis must commute
+    with every regime. Also pins tp=2 == tp=1 within the kernel backend."""
+    out = _run("""
+import jax, numpy as np
+from repro.configs import get_config
+from repro.distributed.sharding import make_serving_mesh
+from repro.models import lm
+from repro.serving import ServingEngine, SpecConfig
+
+cfg = get_config('paper-0.5b').reduced()
+params = lm.init(jax.random.PRNGKey(0), cfg)
+rng = np.random.RandomState(7)
+A = rng.randint(0, cfg.vocab_size, 20).tolist()
+D = rng.randint(0, cfg.vocab_size, 9).tolist()
+
+def run(mesh, attn):
+    eng = ServingEngine(params, cfg, backend='dense', attn_backend=attn,
+                        block_size=4, max_batch=4, max_seq_len=48,
+                        prefill_chunk=8, spec=SpecConfig(k=2), mesh=mesh)
+    outs = [o.token_ids for o in eng.generate([A], max_tokens=8)]
+    outs += [o.token_ids for o in
+             eng.generate([list(A), D], max_tokens=8)]
+    assert eng.cached_tokens_total > 0, 'prefix cache never hit'
+    assert any(s.spec_drafted for s in eng.stats), 'spec never ran'
+    return outs
+
+ref = run(None, 'ref')
+assert run(make_serving_mesh(2), 'ref') == ref, 'ref tp2 != tp1'
+assert run(make_serving_mesh(2), 'interpret') == ref, 'kernel tp2 != ref'
+assert run(None, 'interpret') == ref, 'kernel tp1 != ref'
+print('ATTN_TP_IDENTITY_OK')
+""")
+    assert "ATTN_TP_IDENTITY_OK" in out
+
+
 def test_sharded_cow_copy_matches_unsharded():
     """ensure_writable on a tp=2-sharded pool copies exactly the same bytes
     as on an unsharded pool (per-shard local copy, no resharding), and the
