@@ -56,8 +56,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.distributed.sharding import make_serving_mesh
 from repro.models import lm
-from repro.serving import (EVENT_TOKEN, SamplingParams, ServingEngine,
-                           SpecConfig, Telemetry, finished_outputs)
+from repro.serving import (DisaggCoordinator, EngineSpec, EVENT_TOKEN,
+                           SamplingParams, SpecConfig, Telemetry,
+                           finished_outputs)
 
 import common
 
@@ -135,21 +136,35 @@ def run_churn(params, cfg, work, *, backend: str, scheduler: str,
               block_size: int, max_batch: int, max_seq_len: int,
               num_blocks=None, prefill_chunk: int = 64, mesh=None,
               pipeline: bool = False, warmup: bool = False,
-              telemetry: bool = False, trace_out=None):
+              telemetry: bool = False, trace_out=None,
+              disagg: bool = False, transfer_ttl_steps: int = 64,
+              stochastic: bool = False):
     """Replay a churn workload through one engine via the handle/event API,
     timing every TOKEN event for tail-latency stats. Asserts the KV pool
     drains invariant-clean with zero leaked blocks. With ``warmup`` the
     bucket grid precompiles first and the result records the jit-compile
     counters at the warmup/steady boundary, so callers can assert the whole
     churn replay (admissions, cancels, preemptions, every batch size)
-    compiled nothing."""
-    engine = ServingEngine(params, cfg, backend=backend,
-                           block_size=block_size, num_blocks=num_blocks,
-                           max_batch=max_batch, max_seq_len=max_seq_len,
-                           prefill_chunk=prefill_chunk, scheduler=scheduler,
-                           mesh=mesh, pipeline=pipeline,
-                           telemetry=Telemetry(trace=bool(trace_out))
-                           if telemetry or trace_out else None)
+    compiled nothing.
+
+    ``disagg=True`` drives the same workload through the disaggregated
+    prefill/decode front door (two engines, two KV pools, block migration)
+    — same handle/event API, so this function is backend-agnostic; both
+    pools are invariant-checked. ``stochastic`` samples with a
+    deterministic per-submission seed (temperature + top-k) instead of
+    greedy, so identical workloads must produce identical streams across
+    engine architectures."""
+    espec = EngineSpec(backend=backend, block_size=block_size,
+                       num_blocks=num_blocks, max_batch=max_batch,
+                       max_seq_len=max_seq_len, prefill_chunk=prefill_chunk,
+                       scheduler=scheduler, mesh=mesh, pipeline=pipeline,
+                       telemetry=Telemetry(trace=bool(trace_out))
+                       if telemetry or trace_out else False)
+    if disagg:
+        engine = DisaggCoordinator(params, cfg, spec=espec,
+                                   transfer_ttl_steps=transfer_ttl_steps)
+    else:
+        engine = espec.build(params, cfg)
     if warmup:
         engine.warmup()
     compiles_after_warmup = None
@@ -159,10 +174,18 @@ def run_churn(params, cfg, work, *, backend: str, scheduler: str,
     handles, token_times, cancel_at, outs = {}, {}, {}, {}
     pending = list(work)
     step = 0
+    n_submitted = 0
     while pending or engine.has_unfinished():
         while pending and pending[0][0] <= step:
             _, prompt, max_tokens, prio, c_after = pending.pop(0)
-            h = engine.submit(prompt, sampling=SamplingParams(),
+            # stochastic: a per-submission seed, so the stream is a
+            # function of the request alone — identical across engine
+            # architectures, preemption patterns, and batch composition
+            sp = SamplingParams(temperature=1.1, top_k=50,
+                                seed=9000 + n_submitted) \
+                if stochastic else SamplingParams()
+            n_submitted += 1
+            h = engine.submit(prompt, sampling=sp,
                               max_tokens=max_tokens, priority=prio)
             handles[h.rid] = h
             token_times[h.rid] = []
@@ -182,10 +205,17 @@ def run_churn(params, cfg, work, *, backend: str, scheduler: str,
             elif ev.terminal:
                 outs[ev.rid] = ev.output
         step += 1
-    engine.kv.check_invariants()
-    leaked = (engine.kv.num_blocks - 1) - engine.kv.num_available
-    assert leaked == 0, f"churn leaked {leaked} KV blocks"
+    pools = [("kv", engine.kv)] if not disagg else \
+        [("prefill", engine.prefill_engine.kv),
+         ("decode", engine.decode_engine.kv)]
+    for tag, kv in pools:
+        kv.check_invariants()
+        leaked = (kv.num_blocks - 1) - kv.num_available
+        assert leaked == 0, f"churn leaked {leaked} {tag} KV blocks"
     assert len(outs) == len(work), "some requests never reached terminal"
+    if disagg:
+        assert engine.decode_engine.prefill_tokens_total == 0, \
+            "prefill chunks ran on the decode engine"
 
     def pct_ms(xs, q):
         if not len(xs):
@@ -212,17 +242,38 @@ def run_churn(params, cfg, work, *, backend: str, scheduler: str,
         if trace_out:
             engine.export_trace(trace_out)
             print(f"# churn chrome trace -> {trace_out}")
-    return {"scheduler": scheduler, "steps": step,
-            "requests": len(work),
-            "cancelled": len(cancelled),
-            "preempted": engine.preempted_total,
-            "pipeline": pipeline,
-            "warmup_shapes": len(engine.warmup_report),
-            "jit_compiles_after_warmup": compiles_after_warmup,
-            "jit_compiles_total": compiles_total,
-            "tiers": {"hi": tier_stats(1), "lo": tier_stats(0)},
-            "outputs": {rid: o.token_ids for rid, o in outs.items()
-                        if o.finish_reason != "cancelled"}}
+    result = {"scheduler": scheduler, "steps": step,
+              "requests": len(work),
+              "cancelled": len(cancelled),
+              "preempted": engine.preempted_total,
+              "pipeline": pipeline,
+              "stochastic": stochastic,
+              "warmup_shapes": len(engine.warmup_report),
+              "jit_compiles_after_warmup": compiles_after_warmup,
+              "jit_compiles_total": compiles_total,
+              "tiers": {"hi": tier_stats(1), "lo": tier_stats(0)},
+              "outputs": {rid: o.token_ids for rid, o in outs.items()
+                          if o.finish_reason != "cancelled"}}
+    if disagg:
+        finished = [o for o in outs.values()
+                    if o.finish_reason != "cancelled"]
+        buf = engine.buffer
+        result["disagg"] = {
+            "migrated_blocks_total": engine.migrated_blocks_total,
+            "decode_prefill_tokens": engine.decode_engine.
+            prefill_tokens_total,
+            "transfer_wait_ms_mean": float(np.mean(
+                [o.transfer_wait_ms for o in finished])) if finished
+            else None,
+            "expired": engine.expired_total,
+            "transfer": {"published": buf.published_total,
+                         "claimed": buf.claimed_total,
+                         "cancelled": buf.cancelled_total,
+                         "expired": buf.expired_total,
+                         "capacity": buf.max_entries,
+                         "ttl_steps": buf.ttl_steps},
+        }
+    return result
 
 
 def run_attention_sweep(params, cfg, *, backend: str, block_size: int,
@@ -248,11 +299,11 @@ def run_attention_sweep(params, cfg, *, backend: str, block_size: int,
                    for _ in range(max_batch)] for L in seq_lens}
     per = {a: {} for a in attn_backends}
     for attn in attn_backends:
-        engine = ServingEngine(params, cfg, backend=backend,
-                               attn_backend=attn, block_size=block_size,
-                               max_batch=max_batch, max_seq_len=max_seq,
-                               prefix_cache=False,
-                               prefill_chunk=prefill_chunk, mesh=mesh)
+        engine = EngineSpec(backend=backend, attn_backend=attn,
+                            block_size=block_size, max_batch=max_batch,
+                            max_seq_len=max_seq, prefix_cache=False,
+                            prefill_chunk=prefill_chunk,
+                            mesh=mesh).build(params, cfg)
         for L in seq_lens:
             batch = [list(p) for p in prompts[L]]
             engine.generate(batch, max_tokens=out_tokens)   # compile pass
@@ -285,14 +336,14 @@ def run_backend(params, cfg, backend: str, work, *, block_size: int,
                 prefill_chunk: int = 64, mesh=None, spec=None,
                 telemetry: bool = False, trace_out=None,
                 pipeline: bool = False, warmup: bool = False):
-    engine = ServingEngine(params, cfg, backend=backend,
-                           block_size=block_size, max_batch=max_batch,
-                           max_seq_len=max_seq_len,
-                           prefix_cache=prefix_cache,
-                           prefill_chunk=prefill_chunk, mesh=mesh, spec=spec,
-                           pipeline=pipeline,
-                           telemetry=Telemetry() if telemetry or trace_out
-                           else None)
+    engine = EngineSpec(backend=backend,
+                        block_size=block_size, max_batch=max_batch,
+                        max_seq_len=max_seq_len,
+                        prefix_cache=prefix_cache,
+                        prefill_chunk=prefill_chunk, mesh=mesh, spec=spec,
+                        pipeline=pipeline,
+                        telemetry=Telemetry() if telemetry or trace_out
+                        else False).build(params, cfg)
     if warmup:
         engine.warmup()    # before the compile-replay: its wall time is the
         # (exhaustive) compile cost, so compile_wall below stays ~0
@@ -606,6 +657,68 @@ def main(argv=None):
     print("# scheduler identity: FCFS == priority token-identical "
           "(no contention)")
 
+    # ---- disaggregated prefill/decode: identity under churn ---------------
+    # the full churn workload (cancels, two tiers, tight pool pressure)
+    # through the two-engine front door: every request that FINISHES in both
+    # runs must be token-identical to the single unified engine, zero
+    # prefill chunks may run on the decode engine, and both pools must
+    # drain invariant-clean. Requests the driver cancels can straddle the
+    # finish/cancel boundary differently across architectures (the disagg
+    # path adds transfer steps), so only scheduled-cancel rids may differ.
+    disagg_kw = dict(backend=backend0, scheduler="priority",
+                     block_size=args.block_size, max_batch=args.max_batch,
+                     max_seq_len=churn_seq, num_blocks=tight,
+                     prefill_chunk=args.prefill_chunk, mesh=mesh)
+    disagg_churn = run_churn(params, cfg, churn_work, disagg=True,
+                             telemetry=True, **disagg_kw)
+    cancel_rids = {i for i, (_, _, _, _, c) in enumerate(churn_work)
+                   if c is not None}
+    both = set(churn["outputs"]) & set(disagg_churn["outputs"])
+    for rid in both:
+        assert churn["outputs"][rid] == disagg_churn["outputs"][rid], (
+            f"disagg diverged from the unified engine on rid {rid}")
+    strays = set(churn["outputs"]) ^ set(disagg_churn["outputs"])
+    assert strays <= cancel_rids, (
+        f"non-cancelled requests differ in terminal state: "
+        f"{sorted(strays - cancel_rids)}")
+    dd = disagg_churn["disagg"]
+    assert dd["decode_prefill_tokens"] == 0
+    assert dd["migrated_blocks_total"] > 0
+    assert dd["transfer"]["published"] == (dd["transfer"]["claimed"]
+                                           + dd["transfer"]["cancelled"]
+                                           + dd["transfer"]["expired"])
+    print(f"# disagg churn: outputs token-identical to unified over "
+          f"{len(both)} finished requests, "
+          f"{dd['migrated_blocks_total']} blocks migrated "
+          f"({dd['transfer']['claimed']} transfers claimed, "
+          f"{dd['transfer']['cancelled']} cancelled, "
+          f"{dd['transfer']['expired']} expired), 0 decode-side prefill "
+          f"tokens, both pools drained clean")
+    for tier in ("hi", "lo"):
+        t = disagg_churn["tiers"][tier]
+        if t["ttft_p50_ms"] is not None:
+            print(f"#   disagg {tier}: n={t['requests']} "
+                  f"ttft p50/p95 {t['ttft_p50_ms']:.1f}/"
+                  f"{t['ttft_p95_ms']:.1f}ms, "
+                  f"itl p50/p95 {t['itl_p50_ms']:.1f}/"
+                  f"{t['itl_p95_ms']:.1f}ms")
+
+    # seeded-stochastic identity on the no-cancel workload (tight pool, so
+    # preemption composition still differs across architectures): streams
+    # are a function of the request alone — STRICT full-set equality
+    sto = {}
+    for dis in (False, True):
+        sto[dis] = run_churn(params, cfg, calm, disagg=dis, stochastic=True,
+                             **disagg_kw)
+    assert sto[False]["outputs"] == sto[True]["outputs"], \
+        "disagg diverged from unified under seeded-stochastic sampling"
+    assert sto[True]["disagg"]["decode_prefill_tokens"] == 0
+    print(f"# disagg stochastic identity: all {len(calm)} seeded-sampling "
+          f"streams identical to unified "
+          f"(unified preempted {sto[False]['preempted']}, disagg "
+          f"preempted {sto[True]['preempted']} — composition differs, "
+          f"tokens cannot)")
+
     # ---- attention backends: long-context decode sweep --------------------
     # ref (gather-pages SDPA) vs the fused paged kernel at growing context
     # lengths: token identity is the gate everywhere; the wall-clock
@@ -701,6 +814,17 @@ def main(argv=None):
                 },
             },
             "churn": {k: v for k, v in churn.items() if k != "outputs"},
+            "disagg": {
+                "outputs_identical": True,
+                "stochastic_outputs_identical": True,
+                "finished_compared": len(both),
+                "steps": disagg_churn["steps"],
+                "requests": disagg_churn["requests"],
+                "cancelled": disagg_churn["cancelled"],
+                "preempted": disagg_churn["preempted"],
+                "tiers": disagg_churn["tiers"],
+                **disagg_churn["disagg"],
+            },
             "scheduler_identity": {
                 "workload": "churn arrivals, no cancellations, ample pool",
                 "outputs_identical": True,

@@ -30,7 +30,7 @@ from bench_serving import REPO_ROOT, make_workload, write_bench_json
 import common as bench_common
 from repro.configs import get_config
 from repro.models import lm
-from repro.serving import (SamplingParams, ServingEngine, SpecConfig,
+from repro.serving import (EngineSpec, SamplingParams, SpecConfig,
                            Telemetry, finished_outputs)
 
 
@@ -40,10 +40,10 @@ def run_mode(params, cfg, work, *, backend: str, spec, block_size: int,
         # telemetry on for every mode (baseline included) so the
         # draft/verify/sample phase split and the per-step acceptance
         # histogram land in the bench record with uniform instrumentation
-        return ServingEngine(params, cfg, backend=backend,
-                             block_size=block_size, max_batch=max_batch,
-                             max_seq_len=max_seq_len, spec=spec,
-                             telemetry=Telemetry(trace=False))
+        espec = EngineSpec(backend=backend, block_size=block_size,
+                           max_batch=max_batch, max_seq_len=max_seq_len,
+                           spec=spec, telemetry=Telemetry(trace=False))
+        return espec.build(params, cfg)
 
     def replay(engine):
         outs = {}

@@ -57,6 +57,16 @@ _SMOKE: Dict[str, List[Tuple[str, str, float]]] = {
         ("pipeline.churn.steps", "equal", 0),
         ("pipeline.churn.cancelled", "equal", 0),
         ("pipeline.churn.preempted", "equal", 0),
+        ("disagg.outputs_identical", "equal", 0),
+        ("disagg.stochastic_outputs_identical", "equal", 0),
+        ("disagg.decode_prefill_tokens", "equal", 0),
+        ("disagg.requests", "equal", 0),
+        ("disagg.steps", "equal", 0),
+        ("disagg.cancelled", "equal", 0),
+        ("disagg.preempted", "equal", 0),
+        ("disagg.migrated_blocks_total", "equal", 0),
+        ("disagg.transfer.published", "equal", 0),
+        ("disagg.transfer.claimed", "equal", 0),
     ],
     "spec_decode": [
         ("schema_version", "equal", 0),

@@ -118,6 +118,16 @@ def main(argv=None):
     ap.add_argument("--mesh", action="store_true",
                     help="run the mesh-sharded engine path even at --tp 1 "
                          "(exercises the sharded code path on one device)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: a prefill engine and a "
+                         "decode engine with separate KV pools in one "
+                         "process, bridged by a KV-block transfer buffer "
+                         "(requests migrate after prefill and decode "
+                         "without prefill interference; see "
+                         "docs/serving.md)")
+    ap.add_argument("--transfer-ttl", type=int, default=64,
+                    help="--disagg: steps an unclaimed KV transfer survives "
+                         "before it expires and the request re-queues")
     ap.add_argument("--scheduler", default="fcfs",
                     help="admission policy: fcfs | priority (priority "
                          "preempts lower-priority running requests under "
@@ -212,8 +222,8 @@ def main(argv=None):
         return toks
 
     from repro.distributed.sharding import make_serving_mesh
-    from repro.serving import (SamplingParams, ServingEngine, SpecConfig,
-                               Telemetry, jax_profiler)
+    from repro.serving import (DisaggCoordinator, EngineSpec, SamplingParams,
+                               SpecConfig, Telemetry, jax_profiler)
     spec = None
     if args.spec_k:
         spec = SpecConfig(k=args.spec_k, draft_backend=args.draft_backend,
@@ -236,14 +246,29 @@ def main(argv=None):
     # no cold-start compiles behind /healthz), off for the one-shot demo
     use_pipeline = args.http if args.pipeline is None else args.pipeline
     use_warmup = args.http if args.warmup is None else args.warmup
-    engine = ServingEngine(
-        params, cfg, backend=args.ffn_impl,
+    if args.disagg:
+        if args.pipeline:
+            raise SystemExit("--disagg runs synchronous engines (KV "
+                             "withdraw cannot race a launched step); drop "
+                             "--pipeline")
+        use_pipeline = False
+        if mesh is not None:
+            raise SystemExit("--disagg requires unsharded KV pools; drop "
+                             "--tp/--mesh")
+    espec = EngineSpec(
+        backend=args.ffn_impl,
         attn_backend=args.attn_backend, block_size=args.block_size,
         max_batch=args.max_batch or args.batch,
         max_seq_len=args.prompt_len + args.gen, seed=args.seed, spec=spec,
         prefix_cache=not args.no_prefix_cache,
         prefill_chunk=args.prefill_chunk, scheduler=args.scheduler,
-        telemetry=telemetry, mesh=mesh, pipeline=use_pipeline)
+        telemetry=telemetry if telemetry is not None else False,
+        mesh=mesh, pipeline=use_pipeline)
+    if args.disagg:
+        engine = DisaggCoordinator(params, cfg, spec=espec,
+                                   transfer_ttl_steps=args.transfer_ttl)
+    else:
+        engine = espec.build(params, cfg)
 
     if args.http:
         import signal
@@ -269,6 +294,7 @@ def main(argv=None):
         print(f"[serve/http] listening on http://{server.host}:{server.port} "
               f"(backend={args.ffn_impl}, attn={args.attn_backend}, "
               f"scheduler={args.scheduler}, "
+              + ("disagg=prefill+decode, " if args.disagg else "") +
               f"tp={args.tp}; POST /v1/completions, GET /healthz"
               + (", GET /metrics" if use_telemetry else "") + ")",
               flush=True)

@@ -48,10 +48,24 @@ Subsystem layout:
   spec/        — self-speculative decoding: ``SpecConfig``, the tile-skip
                  ``Drafter``, the trusted-path ``Verifier`` (exact rejection
                  sampling), and KV ``rollback``.
+  engine_spec.py — ``EngineSpec``: ``ServingEngine`` construction kwargs as
+                 a frozen dataclass, shared by every engine-building entry
+                 point (CLI, HTTP server, benches, disagg coordinator).
+  disagg/      — disaggregated prefill/decode serving: a prefill engine and
+                 a decode engine with separate KV pools in one process,
+                 bridged by a bounded refcount-holding ``TransferBuffer``
+                 and a pluggable ``Transport`` (fused in-process copy; host
+                 bytes-roundtrip as the socket stand-in), fronted by
+                 ``DisaggCoordinator`` — the same handle/event API, with
+                 migration implemented as a cross-engine preempt-resume.
 """
 from repro.serving.backends import (DraftPair, ServingBackend, get_backend,
                                     make_draft_pair)
+from repro.serving.disagg import (DisaggCoordinator, HostRoundtripTransport,
+                                  InProcessTransport, TransferBuffer,
+                                  Transport)
 from repro.serving.engine import ServingEngine, StepStats
+from repro.serving.engine_spec import EngineSpec
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import (EVENT_CANCEL, EVENT_FINISH, EVENT_PREEMPT,
                                    EVENT_TOKEN, Request, RequestHandle,
@@ -76,4 +90,6 @@ __all__ = [
     "get_backend", "DraftPair", "make_draft_pair", "SpecConfig",
     "Telemetry", "MetricsRegistry", "ServingMetrics", "Counter", "Gauge",
     "Histogram", "SpanEvent", "TraceRecorder", "span_names", "jax_profiler",
+    "EngineSpec", "DisaggCoordinator", "TransferBuffer", "Transport",
+    "InProcessTransport", "HostRoundtripTransport",
 ]

@@ -1,0 +1,23 @@
+"""Disaggregated prefill/decode serving: engine roles, KV-block transfer,
+and the migration-aware front door. See docs/serving.md for the full
+design; the short version lives in ``coordinator``'s module docstring."""
+from repro.serving.disagg.coordinator import (DisaggCoordinator, STAGE_DECODE,
+                                              STAGE_DONE, STAGE_PREFILL,
+                                              STAGE_QUEUED, STAGE_TRANSFER)
+from repro.serving.disagg.transfer import (HostRoundtripTransport,
+                                           InProcessTransport, TransferBuffer,
+                                           TransferEntry, Transport)
+
+__all__ = [
+    "DisaggCoordinator",
+    "TransferBuffer",
+    "TransferEntry",
+    "Transport",
+    "InProcessTransport",
+    "HostRoundtripTransport",
+    "STAGE_QUEUED",
+    "STAGE_PREFILL",
+    "STAGE_TRANSFER",
+    "STAGE_DECODE",
+    "STAGE_DONE",
+]

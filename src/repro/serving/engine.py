@@ -150,6 +150,10 @@ class StepStats:
     #                          launched device step ran concurrently with
     #                          host-side work (its launch -> collect span);
     #                          0.0 in synchronous mode / nothing in flight
+    migrated_blocks: int = 0  # KV blocks materialized into this engine's pool
+    #                           from another engine this step (disaggregation)
+    role: str = "unified"    # engine role that produced this step
+    #                          (unified | prefill | decode)
 
 
 # canonical power-of-two bucketing lives in pipeline.py (warmup walks the
@@ -171,7 +175,9 @@ class ServingEngine:
                  scheduler: Union[str, Scheduler] = "fcfs",
                  max_stats: Optional[int] = 4096, mesh=None,
                  telemetry: Union[bool, Telemetry, None] = False,
-                 pipeline: bool = False, warmup: bool = False):
+                 pipeline: bool = False, warmup: bool = False,
+                 role: str = "unified"):
+        self.role = role
         self.backend = get_backend(backend)
         # attention backend first: configure() stamps cfg.attn_backend, and
         # every derived config below (prefill/decode/draft/verify) must
@@ -259,6 +265,9 @@ class ServingEngine:
         self.finished_total = 0            # requests finished (EOS / length)
         self.cancelled_total = 0           # requests aborted via cancel()
         self.preempted_total = 0           # scheduler evictions (resumes)
+        self.migrated_blocks_total = 0     # KV blocks materialized into this
+        #                                    pool from another engine (disagg)
+        self._migrated_step = 0            # ... of which since the last step
         self.max_stats = max_stats         # keep only the newest N StepStats
         #                                    (bounded by default so long-lived
         #                                    engines cannot grow without
@@ -267,6 +276,13 @@ class ServingEngine:
         #                                    above never truncate either way)
         self.on_new_work = None            # optional callable: submit/cancel
         #                                    wake-up hook for a server loop
+        self.on_prefill_done = None        # optional callable(req, reason):
+        #                                    fires when a request's prefill
+        #                                    target completes, AFTER its first
+        #                                    sampled token commits but BEFORE
+        #                                    any terminal transition frees its
+        #                                    KV — the disagg coordinator holds
+        #                                    the blocks for transfer here
         self._master_key = jax.random.PRNGKey(seed)
         self._next_rid = 0
         self._step_idx = 0
@@ -329,7 +345,9 @@ class ServingEngine:
                eos_token_id: Optional[int] = None,
                no_spec: bool = False,
                priority: int = 0,
-               stream: bool = False) -> RequestHandle:
+               stream: bool = False,
+               outputs: Sequence[int] = (),
+               base_key: Optional[jax.Array] = None) -> RequestHandle:
         """Queue a request; returns its ``RequestHandle`` immediately.
         Admission happens in ``step()`` under the engine's scheduler policy.
 
@@ -339,14 +357,28 @@ class ServingEngine:
         stream: buffer this request's ``StepEvent``s on the handle
         (``handle.events()`` drains them); ``new_tokens()`` works either way.
         ``no_spec`` opts this request out of speculative decoding (it will
-        run single-token decode even in a speculating engine)."""
+        run single-token decode even in a speculating engine).
+        outputs / base_key are the disaggregation coordinator's resume
+        interface: ``outputs`` pre-commits already-generated tokens (the
+        request admits exactly like a preempt-resume, prefilling
+        ``prompt + outputs``; ``max_tokens`` still counts TOTAL outputs and
+        must exceed ``len(outputs)``), and ``base_key`` overrides the
+        per-request PRNG base key so a cross-engine request samples with the
+        key of the coordinator rid it belongs to, not this engine's local
+        rid."""
         with self._lock:
             sp = sampling or SamplingParams()
+            if outputs and max_tokens <= len(outputs):
+                raise ValueError(
+                    f"max_tokens ({max_tokens}) must exceed pre-committed "
+                    f"outputs ({len(outputs)})")
             req = Request(rid=self._next_rid, prompt=list(map(int, prompt)),
                           max_tokens=max_tokens, sampling=sp,
                           eos_token_id=eos_token_id, no_spec=no_spec,
-                          priority=priority)
-            if req.seq_len + max_tokens > self.max_seq_len:
+                          priority=priority,
+                          output_tokens=list(map(int, outputs)))
+            req.role = self.role
+            if len(req.prompt) + max_tokens > self.max_seq_len:
                 raise ValueError(
                     f"prompt ({len(req.prompt)}) + max_tokens ({max_tokens}) "
                     f"exceeds max_seq_len ({self.max_seq_len})")
@@ -355,8 +387,9 @@ class ServingEngine:
                 raise ValueError(
                     f"request needs {worst} KV blocks but the pool only has "
                     f"{self.kv.num_blocks - 1}; it could never be admitted")
-            req.base_key = sampling_mod.request_base_key(
-                self._master_key, req.rid, sp.seed)
+            req.base_key = base_key if base_key is not None else \
+                sampling_mod.request_base_key(
+                    self._master_key, req.rid, sp.seed)
             if self.record_logits:
                 req.logits_trace = []
             self._next_rid += 1
@@ -398,6 +431,112 @@ class ServingEngine:
         req.cancel_requested = True
         self._wake()
         return True
+
+    def admit_migrated(self, req: Request,
+                       migrate_fn) -> Optional[RequestHandle]:
+        """Admit a request whose KV arrives from ANOTHER engine's pool
+        (disaggregated serving) — the decode-side half of a migration.
+
+        ``req`` is a coordinator-owned ``Request`` carrying committed
+        ``output_tokens``; its cache holds nothing yet. The method plans a
+        prefix-cache-aware allocation for the ``seq_len - 1`` cached
+        positions (matched full prompt blocks dedupe against this pool's
+        content-hash index — their KV is bit-identical by construction, so
+        the transfer skips them), claims the remaining blocks fresh, and
+        calls ``migrate_fn(fresh_blocks, skip_blocks)`` to materialize their
+        contents from the source pool. The request then joins the decode
+        batch directly: ZERO prefill chunks run here, and the first decode
+        writes position ``seq_len - 1`` — exactly where a preempt-resume
+        would continue. Matched blocks are never written before the write
+        position leaves them (the next write lands in a fresh or appended
+        private block), so no copy-on-write is ever needed.
+
+        Returns the engine-side ``RequestHandle``, or None when a batch slot
+        or the worst-case block reservation is unavailable right now (the
+        caller retries after capacity frees up)."""
+        with self._lock:
+            if req.rid in self._requests or req.rid in self.kv:
+                raise ValueError(f"rid {req.rid} already live in this engine")
+            cached = req.seq_len - 1
+            plen = len(req.prompt)
+            total = self.kv.blocks_for(plen + req.max_tokens)
+            if plen + req.max_tokens > self.max_seq_len:
+                raise ValueError(
+                    f"prompt ({plen}) + max_tokens ({req.max_tokens}) "
+                    f"exceeds max_seq_len ({self.max_seq_len})")
+            if total > self.kv.num_blocks - 1:
+                raise ValueError(
+                    f"request needs {total} KV blocks but the pool only has "
+                    f"{self.kv.num_blocks - 1}; it could never be admitted")
+            n_blocks = self.kv.blocks_for(cached)
+            if self.prefix_cache:
+                matched, avail = self.kv.plan_admission(req.prompt)
+            else:
+                matched, avail = [], self.kv.num_available
+            have_slot = len(self.running) + len(self.prefilling) \
+                < self.max_batch
+            if not have_slot or avail - self._reserved < total - len(matched):
+                return None
+            if self.prefix_cache:
+                self.kv.commit_allocation(self.kv.plan_allocation(
+                    req.rid, req.prompt, n_blocks, matched=matched))
+            else:
+                self.kv.allocate(req.rid, n_blocks)
+            fresh = self.kv.block_table(req.rid)[len(matched):]
+            if fresh:
+                migrate_fn(fresh, len(matched))
+            if self.prefix_cache:
+                self.kv.register_prefix(req.rid, req.prompt)
+            hit = len(matched) * self.kv.block_size
+            req.cached_prefix_tokens = hit
+            self.cached_tokens_total += hit
+            self.prompt_tokens_total += plen
+            req.migrated_blocks += len(fresh)
+            self.migrated_blocks_total += len(fresh)
+            self._migrated_step += len(fresh)
+            req.reserved_blocks = total - n_blocks
+            self._reserved += req.reserved_blocks
+            req.cow_spare = 0
+            req.status = RUNNING
+            req.role = self.role
+            handle = RequestHandle(self, req)
+            self._requests[req.rid] = req
+            self._handles[req.rid] = handle
+            self.running.append(req)
+            if self.telemetry is not None:
+                self.telemetry.on_migrated(req, len(fresh))
+        self._wake()
+        return handle
+
+    def withdraw(self, rid: int) -> Optional[Request]:
+        """Remove a RUNNING request from this engine, freeing/parking its KV
+        and returning the ``Request`` — committed outputs intact — to the
+        caller instead of this engine's own queue. This is the disagg
+        coordinator's cross-engine preemption primitive: the withdrawn
+        request re-queues at the coordinator, re-prefills on the prefill
+        engine, and re-migrates, exactly like an in-engine preempt-resume.
+        Returns None when the rid is unknown or not currently running."""
+        with self._lock:
+            if self._inflight is not None:
+                raise RuntimeError(
+                    "cannot withdraw with a launched step in flight; "
+                    "flush() first (disagg engines run pipeline=False)")
+            req = self._requests.get(rid)
+            if req is None or req.status != RUNNING:
+                return None
+            self.kv.free(rid)
+            self._reserved -= req.reserved_blocks
+            req.reserved_blocks = 0
+            req.cow_spare = 0
+            self.running = [r for r in self.running if r.rid != rid]
+            self._requests.pop(rid, None)
+            self._handles.pop(rid, None)
+            req.status = PREEMPTED
+            req.num_preemptions += 1
+            self.preempted_total += 1
+            if self.telemetry is not None:
+                self.telemetry.on_preempt(req)
+            return req
 
     def has_unfinished(self) -> bool:
         return bool(len(self.scheduler) or self.prefilling or self.running
@@ -584,7 +723,10 @@ class ServingEngine:
             spec_drafted=drafted, spec_accepted=accepted,
             wall_ms=(time.perf_counter() - t_step) * 1e3,
             sync_ms=self._sync_s * 1e3,
-            overlap_ms=overlap_ms))
+            overlap_ms=overlap_ms,
+            migrated_blocks=self._migrated_step,
+            role=self.role))
+        self._migrated_step = 0
         if self.max_stats is not None and len(self.stats) >= 2 * self.max_stats:
             del self.stats[:-self.max_stats]     # amortized O(1) trim
         if tm is not None:
@@ -1265,6 +1407,11 @@ class ServingEngine:
             events.append(StepEvent(kind=EVENT_TOKEN, rid=r.rid,
                                     step=self._step_idx,
                                     tokens=(int(tok[i]),)))
+            if self.on_prefill_done is not None:
+                # disagg hook: the row's whole prefill target is cached and
+                # its first token committed, but nothing is freed yet — the
+                # coordinator can still hold the blocks for transfer
+                self.on_prefill_done(r, reason)
             if reason:
                 events.append(self._terminal_event(r, reason))
             else:

@@ -380,6 +380,28 @@ class PagedKVCache:
                 freed += 1
         return parked, freed
 
+    def hold(self, owner: int, blocks: Sequence[int]) -> None:
+        """Pin ``blocks`` under a synthetic ``owner`` id (incref each, reviving
+        any evictable ones out of the LRU) and record them as the owner's
+        table. Release with ``free(owner)``.
+
+        This is the disaggregation transfer-buffer primitive: when a prefill
+        engine finishes a request and its table is about to be freed, the
+        coordinator holds the blocks so their contents stay intact until a
+        decode engine claims (or a TTL expires) the entry. ``owner`` must not
+        collide with any request id — callers use negative ids."""
+        if owner in self._tables:
+            raise ValueError(f"owner {owner} already holds blocks")
+        for blk in blocks:
+            if blk == NULL_BLOCK:
+                raise ValueError("cannot hold the null block")
+            if self._ref[blk] == 0:
+                if blk not in self._lru:
+                    raise ValueError(f"block {blk} is free; cannot hold it")
+                self._lru.pop(blk)                       # revive from LRU
+            self._ref[blk] += 1
+        self._tables[owner] = list(blocks)
+
     def __contains__(self, rid: int) -> bool:
         """Whether ``rid`` currently owns a block table."""
         return rid in self._tables

@@ -83,6 +83,11 @@ class Request:
     span_open: Optional[tuple] = None        # (name, t0, args) span in flight
     spec_drafted: int = 0                    # draft tokens proposed for me
     spec_accepted: int = 0                   # ... of which the verifier kept
+    role: str = "unified"                    # engine role that owns the request
+    #                                          (unified | prefill | decode)
+    migrated_blocks: int = 0                 # KV blocks materialized into this
+    #                                          engine's pool from a transfer
+    transfer_wait_ms: float = 0.0            # publish->claim wait, cumulative
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     finish_reason: Optional[str] = None
@@ -138,6 +143,9 @@ class RequestOutput:
     spec_accepted: int = 0           # ... of which the verifier accepted
     cached_prefix_tokens: int = 0    # prefill tokens served from the prefix
     #                                  cache (latest admission)
+    role: str = "unified"            # engine role that produced the output
+    migrated_blocks: int = 0         # KV blocks that arrived via migration
+    transfer_wait_ms: float = 0.0    # publish->claim transfer wait, cumulative
     logits: Optional[list] = None    # per-token logits (engine debug mode)
     spans: Optional[tuple] = None    # lifecycle SpanEvents (telemetry tracing
     #                                  on: QUEUED/PREFILL/DECODE spans plus
@@ -174,6 +182,9 @@ class RequestOutput:
                    spec_drafted=req.spec_drafted,
                    spec_accepted=req.spec_accepted,
                    cached_prefix_tokens=req.cached_prefix_tokens,
+                   role=req.role,
+                   migrated_blocks=req.migrated_blocks,
+                   transfer_wait_ms=req.transfer_wait_ms,
                    logits=(None if req.logits_trace is None
                            else list(req.logits_trace)),
                    spans=(None if req.spans is None else tuple(req.spans)))

@@ -24,7 +24,9 @@ Endpoints:
   GET  /v1/stats           engine counters (finished/cancelled/preempted,
                            KV-pool picture) + a telemetry rollup (phase
                            timing means, cache hit rate, spec acceptance,
-                           compile counts) when the engine has telemetry
+                           compile counts) when the engine has telemetry;
+                           behind ``--disagg`` a ``roles`` section adds the
+                           per-role engine + transfer-buffer picture
   GET  /metrics            Prometheus text exposition of the engine's
                            metrics registry (step-phase histograms, KV
                            occupancy gauges, TTFT/ITL histograms, ...);
@@ -329,6 +331,10 @@ class ServingServer:
                       "reserved": e._reserved},
                "prefill_tokens_total": e.prefill_tokens_total,
                "cached_tokens_total": e.cached_tokens_total}
+        role_stats = getattr(e, "role_stats", None)
+        if role_stats is not None:
+            # disaggregated front door: per-role engine + transfer-buffer view
+            out["roles"] = role_stats()
         if e.telemetry is not None:
             out["telemetry"] = e.telemetry.summary()
             sp = out["telemetry"].get("sparsity")

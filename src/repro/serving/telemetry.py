@@ -299,8 +299,10 @@ class ServingMetrics:
             "serving_steps_total", "Engine step() iterations")
         self.requests_total = r.counter(
             "serving_requests_total",
-            "Requests reaching a terminal state, by outcome",
-            ("outcome",))                      # finished | cancelled
+            "Requests reaching a terminal state, by outcome and engine role "
+            "(unified single-engine serving; prefill / decode under "
+            "--disagg)",
+            ("outcome", "role"))               # finished | cancelled
         self.submitted_total = r.counter(
             "serving_requests_submitted_total", "Requests submitted")
         self.preemptions_total = r.counter(
@@ -334,11 +336,35 @@ class ServingMetrics:
             buckets=RATIO_BUCKETS)
         self.ttft_seconds = r.histogram(
             "serving_ttft_seconds",
-            "Time to first token by priority tier", ("priority",))
+            "Time to first token by priority tier and engine role (for the "
+            "decode role this is arrival to first decode-engine token, i.e. "
+            "it includes the migration wait)", ("priority", "role"))
         self.itl_seconds = r.histogram(
             "serving_itl_seconds",
-            "Inter-token latency by priority tier (spec steps spread the "
-            "gap over the tokens they commit)", ("priority",))
+            "Inter-token latency by priority tier and engine role (spec "
+            "steps spread the gap over the tokens they commit)",
+            ("priority", "role"))
+        self.kv_migrated_blocks_total = r.counter(
+            "serving_kv_migrated_blocks_total",
+            "KV blocks materialized into an engine's pool from another "
+            "engine's (disaggregated prefill->decode migration; dedup "
+            "against the local prefix cache skips blocks, which do not "
+            "count here)",
+            ("role",))
+        self.transfer_buffer_entries = r.gauge(
+            "serving_transfer_buffer_entries",
+            "Published-but-unclaimed KV transfer entries (disagg)")
+        self.transfer_buffer_blocks = r.gauge(
+            "serving_transfer_buffer_blocks",
+            "Source-pool KV blocks pinned by unclaimed transfer entries "
+            "(disagg)")
+        self.transfer_expired_total = r.counter(
+            "serving_transfer_expired_total",
+            "Transfer entries dropped by TTL before a decode engine "
+            "claimed them (their requests re-queue and re-prefill)")
+        self.transfer_wait_seconds = r.histogram(
+            "serving_transfer_wait_seconds",
+            "Publish-to-claim wait of migrated KV entries (disagg)")
         self.jit_compiles_total = r.counter(
             "serving_jit_compiles_total",
             "Bucketed-shape JIT cache misses by entrypoint "
@@ -384,6 +410,16 @@ class ServingMetrics:
             "a measurement)")
 
 
+def _lat_key(label_set: Dict[str, str]) -> str:
+    """ttft_s/itl_s summary key for one latency label set: the bare priority
+    tier for unified (single-engine) serving — the historical key shape —
+    and ``priority@role`` for disagg roles (a shared registry carries both
+    roles' series, which must not collide)."""
+    if label_set.get("role", "unified") == "unified":
+        return label_set["priority"]
+    return f'{label_set["priority"]}@{label_set["role"]}'
+
+
 class Telemetry:
     """What the engine holds when observability is on: the metric catalog
     plus the span/trace recorder, behind lifecycle hooks.
@@ -395,7 +431,12 @@ class Telemetry:
 
     def __init__(self, *, metrics: bool = True, trace: bool = True,
                  registry: Optional[MetricsRegistry] = None,
-                 max_trace_events: int = 200_000):
+                 max_trace_events: int = 200_000,
+                 role: str = "unified"):
+        self.role = role          # engine role stamped on per-role labels
+        #                           (unified | prefill | decode); the disagg
+        #                           coordinator builds one facade per engine
+        #                           sharing a single registry
         self.registry = registry if registry is not None \
             else MetricsRegistry(enabled=metrics)
         self.metrics = ServingMetrics(self.registry)
@@ -439,9 +480,23 @@ class Telemetry:
             self.trace.instant(req, SPAN_PREEMPT)
             self.trace.begin_span(req, SPAN_QUEUED)       # re-queued
 
+    def on_migrated(self, req, blocks: int) -> None:
+        """A request's KV just materialized into this engine's pool from
+        another engine (``blocks`` freshly filled; deduped blocks excluded).
+        It enters decode directly — no admission/prefill hooks fire here."""
+        self.metrics.kv_migrated_blocks_total.inc(blocks, role=self.role)
+        if self.trace is not None:
+            if req.spans is None:
+                req.spans = []
+            if req.span_open is not None:
+                self.trace.end_span(req)            # QUEUED after a preempt
+            self.trace.begin_span(req, SPAN_DECODE,
+                                  migrated_blocks=blocks)
+
     def on_terminal(self, req, reason: str, cancelled: bool) -> None:
         self.metrics.requests_total.inc(
-            outcome="cancelled" if cancelled else "finished")
+            outcome="cancelled" if cancelled else "finished",
+            role=self.role)
         self._last_token_t.pop(req.rid, None)
         if self.trace is not None and req.spans is not None:
             self.trace.end_span(req)
@@ -461,15 +516,31 @@ class Telemetry:
         last = self._last_token_t.get(req.rid)
         if last is None:
             self.metrics.ttft_seconds.observe(now - req.arrival_time,
-                                              priority=tier)
+                                              priority=tier, role=self.role)
             gap_tokens = n - 1
         else:
             gap_tokens = n
         if gap_tokens > 0 and last is not None:
             per_tok = (now - last) / gap_tokens
             for _ in range(gap_tokens):
-                self.metrics.itl_seconds.observe(per_tok, priority=tier)
+                self.metrics.itl_seconds.observe(per_tok, priority=tier,
+                                                 role=self.role)
         self._last_token_t[req.rid] = now
+
+    # ---- disaggregation (coordinator-driven) -------------------------------
+
+    def on_transfer_buffer(self, entries: int, blocks: int) -> None:
+        """Point-in-time transfer-buffer occupancy (set each coordinator
+        step): unclaimed entries and the source-pool blocks they pin."""
+        self.metrics.transfer_buffer_entries.set(entries)
+        self.metrics.transfer_buffer_blocks.set(blocks)
+
+    def on_transfer_expired(self, entries: int) -> None:
+        if entries:
+            self.metrics.transfer_expired_total.inc(entries)
+
+    def on_transfer_wait(self, wait_s: float) -> None:
+        self.metrics.transfer_wait_seconds.observe(wait_s)
 
     def on_spec(self, req, drafted: int, accepted: int) -> None:
         self.metrics.spec_tokens_total.inc(drafted, outcome="drafted")
@@ -605,9 +676,9 @@ class Telemetry:
             "spec_acceptance_rate":
                 accepted / drafted if drafted else None,
             "spec_acceptance_hist": m.spec_acceptance.snapshot(),
-            "ttft_s": {ls["priority"]: m.ttft_seconds.snapshot(**ls)
+            "ttft_s": {_lat_key(ls): m.ttft_seconds.snapshot(**ls)
                        for ls in m.ttft_seconds.label_sets()},
-            "itl_s": {ls["priority"]: m.itl_seconds.snapshot(**ls)
+            "itl_s": {_lat_key(ls): m.itl_seconds.snapshot(**ls)
                       for ls in m.itl_seconds.label_sets()},
             "jit_compiles": {
                 e: m.jit_compiles_total.value(entry=e)

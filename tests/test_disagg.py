@@ -1,0 +1,378 @@
+"""Disaggregated prefill/decode serving: transfer-buffer refcount
+invariants, cancellation at every migration stage, TTL expiry with
+re-prefill, decode-side prefix-cache dedupe, and token identity between the
+coordinator and a single unified engine — greedy and seeded-stochastic,
+through cancel/preempt churn.
+
+The acceptance bar mirrors the unified handle-API suite: zero leaked
+blocks in EITHER pool after any interleaving (``check_invariants`` after
+every step of a randomized schedule), zero prefill chunks executed on the
+decode engine, and bit-identical token streams vs the same spec served by
+one engine.
+"""
+import dataclasses
+import inspect
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import (EVENT_CANCEL, EVENT_FINISH, DisaggCoordinator,
+                           EngineSpec, HostRoundtripTransport, PagedKVCache,
+                           SamplingParams, ServingEngine, TransferBuffer,
+                           finished_outputs)
+from repro.serving.disagg.coordinator import (STAGE_DECODE, STAGE_PREFILL,
+                                              STAGE_QUEUED, STAGE_TRANSFER)
+
+BS = 4
+
+
+def _cfg():
+    base = get_config("paper-0.5b").reduced()
+    return dataclasses.replace(base, sparsity=dataclasses.replace(
+        base.sparsity, ffn_impl="dense"))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, n).tolist() for n in lens]
+
+
+def _drain(engine):
+    events = []
+    while engine.has_unfinished():
+        events.extend(engine.step())
+    return events
+
+
+def _assert_clean(coord):
+    for name, kv in (("prefill", coord.prefill_engine.kv),
+                     ("decode", coord.decode_engine.kv)):
+        kv.check_invariants()
+        assert kv.num_available == kv.num_blocks - 1, \
+            f"{name} pool leaked blocks"
+    assert coord.prefill_engine._reserved == 0
+    assert coord.decode_engine._reserved == 0
+    assert len(coord.buffer) == 0 and coord.buffer.blocks_pinned == 0
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = _cfg()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _spec(**kw):
+    base = dict(backend="dense", block_size=BS, max_batch=4, max_seq_len=48,
+                prefill_chunk=8, scheduler="priority")
+    base.update(kw)
+    return EngineSpec(**base)
+
+
+# --------------------------------------------------------------------------- #
+# transfer buffer + hold() units (no model step required)
+# --------------------------------------------------------------------------- #
+
+def test_hold_pins_blocks_across_free():
+    kv = PagedKVCache(_cfg(), num_blocks=10, block_size=BS)
+    kv.allocate(rid=7, n_blocks=3)
+    blocks = kv.block_table(7)
+    kv.hold(-8, blocks)
+    kv.free(7)                       # request table gone, contents pinned
+    kv.check_invariants()
+    assert kv.num_available == 9 - 3
+    assert all(kv.ref_count(b) == 1 for b in blocks)
+    kv.free(-8)
+    kv.check_invariants()
+    assert kv.num_available == 9
+
+
+def test_hold_rejects_null_free_and_duplicate_owner():
+    kv = PagedKVCache(_cfg(), num_blocks=6, block_size=BS)
+    kv.allocate(rid=1, n_blocks=2)
+    blocks = kv.block_table(1)
+    with pytest.raises(ValueError, match="null block"):
+        kv.hold(-2, [0])
+    free_block = [b for b in range(1, 6) if b not in blocks][0]
+    with pytest.raises(ValueError, match="free"):
+        kv.hold(-2, [free_block])
+    kv.hold(-2, blocks)
+    with pytest.raises(ValueError, match="already holds"):
+        kv.hold(-2, blocks)
+    kv.free(-2)
+    kv.free(1)
+    kv.check_invariants()
+
+
+def test_transfer_buffer_lifecycle_and_counters():
+    kv = PagedKVCache(_cfg(), num_blocks=16, block_size=BS)
+    buf = TransferBuffer(kv, max_entries=2, ttl_steps=3)
+    for rid in (0, 1):
+        kv.allocate(rid, 2)
+        buf.publish(rid, kv.block_table(rid), cached_tokens=7, step=rid)
+        kv.free(rid)
+    assert len(buf) == 2 and buf.full and buf.blocks_pinned == 4
+    assert 0 in buf and buf.get(1).cached_tokens == 7
+    kv.allocate(5, 2)
+    with pytest.raises(RuntimeError, match="full"):
+        buf.publish(5, kv.block_table(5), cached_tokens=7, step=2)
+    kv.free(5)
+    entry = buf.claim(0)
+    assert entry.rid == 0 and len(buf) == 1
+    assert buf.cancel(1) and not buf.cancel(1)
+    kv.check_invariants()
+    assert kv.num_available == 15
+    # TTL: a fresh entry published at step 10 expires at step >= 13
+    kv.allocate(9, 1)
+    buf.publish(9, kv.block_table(9), cached_tokens=3, step=10)
+    kv.free(9)
+    assert buf.expire(now_step=12) == []
+    dropped = buf.expire(now_step=13)
+    assert [e.rid for e in dropped] == [9] and len(buf) == 0
+    kv.check_invariants()
+    assert kv.num_available == 15
+    assert (buf.published_total, buf.claimed_total, buf.cancelled_total,
+            buf.expired_total) == (3, 1, 1, 1)
+
+
+# --------------------------------------------------------------------------- #
+# coordinator vs unified engine: token identity
+# --------------------------------------------------------------------------- #
+
+def test_disagg_greedy_identical_to_unified(dense_model):
+    params, cfg = dense_model
+    spec = _spec()
+    prompts = _prompts(cfg, [6, 11, 9, 14])
+
+    def run(engine):
+        hs = [engine.submit(p, max_tokens=8) for p in prompts]
+        _drain(engine)
+        return [h.result().token_ids for h in hs]
+
+    unified = run(spec.build(params, cfg))
+    coord = DisaggCoordinator(params, cfg, spec=spec)
+    got = run(coord)
+    assert got == unified
+    assert coord.decode_engine.prefill_tokens_total == 0
+    assert coord.decode_engine.migrated_blocks_total > 0
+    _assert_clean(coord)
+    rs = coord.role_stats()
+    assert rs["transfer"]["published_total"] == \
+        rs["transfer"]["claimed_total"] == 4
+
+
+def test_disagg_stochastic_identical_to_unified(dense_model):
+    params, cfg = dense_model
+    spec = _spec(max_batch=2)
+    prompts = _prompts(cfg, [7, 12, 9], seed=3)
+
+    def run(engine):
+        hs = [engine.submit(p, max_tokens=6,
+                            sampling=SamplingParams(temperature=1.3, top_k=40,
+                                                    seed=100 + i))
+              for i, p in enumerate(prompts)]
+        _drain(engine)
+        return [h.result().token_ids for h in hs]
+
+    unified = run(spec.build(params, cfg))
+    coord = DisaggCoordinator(params, cfg, spec=spec)
+    assert run(coord) == unified
+    _assert_clean(coord)
+
+
+def test_disagg_host_roundtrip_transport(dense_model):
+    params, cfg = dense_model
+    spec = _spec(max_batch=2)
+    prompts = _prompts(cfg, [10, 6], seed=5)
+
+    def run(engine):
+        hs = [engine.submit(p, max_tokens=5) for p in prompts]
+        _drain(engine)
+        return [h.result().token_ids for h in hs]
+
+    unified = run(spec.build(params, cfg))
+    coord = DisaggCoordinator(params, cfg, spec=spec,
+                              transport=HostRoundtripTransport())
+    assert run(coord) == unified
+    _assert_clean(coord)
+
+
+# --------------------------------------------------------------------------- #
+# cancellation at every migration stage
+# --------------------------------------------------------------------------- #
+
+def test_cancel_queued_and_mid_prefill(dense_model):
+    params, cfg = dense_model
+    coord = DisaggCoordinator(params, cfg, spec=_spec(max_batch=1))
+    ha = coord.submit(_prompts(cfg, [6])[0], max_tokens=4)
+    hb = coord.submit(_prompts(cfg, [20], seed=1)[0], max_tokens=4)
+    assert coord.cancel(hb)              # still queued: prefill slot is busy
+    coord.step()
+    assert hb.finished and hb.result().finish_reason == "cancelled"
+    hc = coord.submit(_prompts(cfg, [24], seed=2)[0], max_tokens=4)
+    while coord._slots[hc.rid].stage != STAGE_PREFILL:
+        coord.step()
+    coord.cancel(hc)                     # mid-prefill: forwarded to engine
+    _drain(coord)
+    assert hc.result().finish_reason == "cancelled"
+    assert ha.result().finish_reason == "length"
+    _assert_clean(coord)
+
+
+def test_cancel_mid_transfer(dense_model):
+    params, cfg = dense_model
+    # fcfs never preempts, so with one decode slot occupied the second
+    # request parks in the transfer buffer — cancel it there
+    coord = DisaggCoordinator(params, cfg, spec=_spec(max_batch=1,
+                                                      scheduler="fcfs"))
+    ha = coord.submit(_prompts(cfg, [6])[0], max_tokens=12)
+    while coord._slots[ha.rid].stage != STAGE_DECODE:
+        coord.step()
+    hb = coord.submit(_prompts(cfg, [9], seed=1)[0], max_tokens=4)
+    while coord._slots[hb.rid].stage != STAGE_TRANSFER:
+        coord.step()
+    assert len(coord.buffer) == 1
+    coord.cancel(hb)
+    evs = coord.step()
+    assert any(e.kind == EVENT_CANCEL and e.rid == hb.rid for e in evs)
+    assert hb.result().finish_reason == "cancelled"
+    assert coord.buffer.cancelled_total == 1 and len(coord.buffer) == 0
+    _drain(coord)
+    assert ha.result().finish_reason == "length"
+    _assert_clean(coord)
+
+
+def test_cancel_mid_decode(dense_model):
+    params, cfg = dense_model
+    coord = DisaggCoordinator(params, cfg, spec=_spec())
+    h = coord.submit(_prompts(cfg, [8])[0], max_tokens=16)
+    while coord._slots[h.rid].stage != STAGE_DECODE:
+        coord.step()
+    coord.step()
+    coord.cancel(h)
+    _drain(coord)
+    out = h.result()
+    assert out.finish_reason == "cancelled" and len(out.token_ids) < 16
+    _assert_clean(coord)
+
+
+# --------------------------------------------------------------------------- #
+# TTL expiry -> re-queue -> re-prefill, still token-identical
+# --------------------------------------------------------------------------- #
+
+def test_ttl_expiry_requeues_and_preserves_tokens(dense_model):
+    params, cfg = dense_model
+    spec = _spec(max_batch=1, scheduler="fcfs", num_blocks=12, max_seq_len=32)
+    prompts = _prompts(cfg, [6, 9], seed=7)
+
+    def run(engine):
+        hs = [engine.submit(p, max_tokens=8) for p in prompts]
+        _drain(engine)
+        return [h.result().token_ids for h in hs]
+
+    unified = run(spec.build(params, cfg))
+    coord = DisaggCoordinator(params, cfg, spec=spec, transfer_ttl_steps=2)
+    assert run(coord) == unified
+    # with one decode slot, the second request must sit in the buffer past
+    # the 2-step TTL at least once -> expire -> re-prefill -> same tokens
+    assert coord.buffer.expired_total >= 1
+    assert coord.expired_total == coord.buffer.expired_total
+    assert coord.preempted_total >= coord.expired_total
+    _assert_clean(coord)
+
+
+# --------------------------------------------------------------------------- #
+# decode-side prefix-cache dedupe
+# --------------------------------------------------------------------------- #
+
+def test_migration_dedupes_against_warm_decode_prefix_cache(dense_model):
+    params, cfg = dense_model
+    coord = DisaggCoordinator(params, cfg, spec=_spec())
+    # 3 full prompt blocks + a 2-token tail block: the repeat dedupes the
+    # full blocks against the warm decode prefix cache but must still
+    # transfer the private tail block
+    prompt = _prompts(cfg, [3 * BS + 2], seed=11)[0]
+    h1 = coord.submit(prompt, max_tokens=4)
+    _drain(coord)
+    h2 = coord.submit(prompt, max_tokens=4)
+    _drain(coord)
+    o1, o2 = h1.result(), h2.result()
+    assert o1.token_ids == o2.token_ids
+    assert 0 < o2.migrated_blocks < o1.migrated_blocks
+    assert o2.cached_prefix_tokens > 0
+    assert o1.role == o2.role == "decode"
+    assert o1.transfer_wait_ms >= 0.0
+
+
+# --------------------------------------------------------------------------- #
+# randomized migration churn: invariants after every step
+# --------------------------------------------------------------------------- #
+
+def test_randomized_churn_invariants_every_step(dense_model):
+    params, cfg = dense_model
+    worst = -(-24 // BS) + 1
+    spec = _spec(max_batch=2, max_seq_len=24, num_blocks=1 + 2 * worst)
+    coord = DisaggCoordinator(params, cfg, spec=spec, transfer_ttl_steps=3)
+    rng = np.random.RandomState(42)
+    handles, n_submitted = [], 0
+    while n_submitted < 10 or coord.has_unfinished():
+        if n_submitted < 10 and rng.rand() < 0.5:
+            p = rng.randint(0, cfg.vocab_size,
+                            rng.randint(4, 14)).tolist()
+            handles.append(coord.submit(
+                p, max_tokens=int(rng.randint(2, 8)),
+                priority=int(rng.randint(0, 3))))
+            n_submitted += 1
+        if handles and rng.rand() < 0.15:
+            coord.cancel(handles[rng.randint(len(handles))])
+        coord.step()
+        for kv in (coord.prefill_engine.kv, coord.decode_engine.kv):
+            kv.check_invariants()
+    reasons = {h.result().finish_reason for h in handles}
+    assert reasons <= {"length", "cancelled"}
+    assert coord.finished_total + coord.cancelled_total == 10
+    assert coord.decode_engine.prefill_tokens_total == 0
+    _assert_clean(coord)
+
+
+# --------------------------------------------------------------------------- #
+# EngineSpec <-> ServingEngine ctor drift guard
+# --------------------------------------------------------------------------- #
+
+def test_engine_spec_mirrors_engine_ctor():
+    sig = inspect.signature(ServingEngine.__init__)
+    ctor = {n: p for n, p in sig.parameters.items()
+            if n not in ("self", "params", "cfg")}
+    fields = {f.name: f for f in dataclasses.fields(EngineSpec)}
+    assert set(ctor) == set(fields), \
+        "EngineSpec fields drifted from ServingEngine.__init__ kwargs"
+    for name, p in ctor.items():
+        if p.default is not inspect.Parameter.empty:
+            assert fields[name].default == p.default, \
+                f"default mismatch for {name!r}"
+
+
+def test_engine_spec_build_and_replace(dense_model):
+    params, cfg = dense_model
+    spec = _spec(max_batch=3)
+    engine = spec.build(params, cfg)
+    assert isinstance(engine, ServingEngine)
+    assert engine.max_batch == 3 and engine.role == "unified"
+    assert spec.replace(role="prefill").role == "prefill"
+    assert spec.role == "unified"                     # frozen: no mutation
+    h = engine.submit(_prompts(cfg, [5])[0], max_tokens=3)
+    outs = [o for ev in _drain(engine) for o in finished_outputs([ev])]
+    assert outs and h.result().token_ids == outs[0].token_ids
+
+
+def test_coordinator_rejects_pipeline_and_scheduler_instance(dense_model):
+    params, cfg = dense_model
+    with pytest.raises(NotImplementedError):
+        DisaggCoordinator(params, cfg, spec=_spec(pipeline=True))
+    from repro.serving import PriorityScheduler
+    with pytest.raises(ValueError, match="policy name"):
+        DisaggCoordinator(params, cfg,
+                          spec=_spec(scheduler=PriorityScheduler()))

@@ -180,7 +180,7 @@ def test_metrics_exposition(server):
         in text
     assert 'serving_kv_blocks{state="free"}' in text
     assert "# TYPE serving_prefix_tokens_total counter" in text
-    assert 'serving_ttft_seconds_count{priority="0"}' in text
+    assert 'serving_ttft_seconds_count{priority="0",role="unified"}' in text
     assert "serving_steps_total" in text
     # counters agree with the engine's own books
     for line in text.splitlines():

@@ -236,11 +236,12 @@ def test_engine_metrics_books(dense_model):
     outs = engine.generate(prompts, sampling=SamplingParams(), max_tokens=5)
     m = engine.telemetry.metrics
     assert m.submitted_total.value() == 2
-    assert m.requests_total.value(outcome="finished") == 2
+    assert m.requests_total.value(outcome="finished", role="unified") == 2
     assert m.tokens_total.value() == sum(len(o.token_ids) for o in outs)
     assert m.steps_total.value() == engine._step_idx
-    assert m.ttft_seconds.snapshot(priority="0")["count"] == 2
-    assert m.itl_seconds.snapshot(priority="0")["count"] == \
+    assert m.ttft_seconds.snapshot(priority="0",
+                                   role="unified")["count"] == 2
+    assert m.itl_seconds.snapshot(priority="0", role="unified")["count"] == \
         sum(len(o.token_ids) for o in outs) - 2
     assert m.jit_compiles_total.value(entry="decode") >= 1
     assert m.jit_compiles_total.value(entry="prefill") >= 1
